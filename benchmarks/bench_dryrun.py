@@ -1,0 +1,60 @@
+"""Render the multi-pod dry-run roofline table (deliverable g) from the
+JSONL records produced by ``repro.launch.dryrun``.
+
+This is the "per-paper-table" bench for the scaling claim: the paper
+reports wall-clock on a 5-node EC2 cluster; on a TPU target without
+hardware we report the three per-chip roofline terms + the dominant
+bottleneck per (arch x shape x mesh), which is the deployable-scale
+equivalent."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "results",
+                       "dryrun_final.jsonl")
+FALLBACK = os.path.join(os.path.dirname(__file__), "results",
+                        "dryrun_baseline.jsonl")
+
+
+def load(path: str) -> Dict:
+    rows = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            rows[(r["arch"], r["shape"], r["mesh"])] = r  # last write wins
+    return rows
+
+
+def render(rows: Dict, csv=print) -> None:
+    csv("cell,us_per_call,derived")
+    for (a, s, m), r in sorted(rows.items()):
+        name = f"dryrun_{a}_{s}_{m}"
+        if r["status"] == "skipped":
+            csv(f"{name},0,skipped:{r['reason'][:40]}")
+            continue
+        if r["status"] != "ok":
+            csv(f"{name},0,ERROR")
+            continue
+        csv(f"{name},{r['step_time']*1e6:.0f},"
+            f"bneck={r['bottleneck']};mfu_bound={r['mfu_bound']*100:.2f}%;"
+            f"useful={r['useful_frac']*100:.1f}%;"
+            f"peak_gib={r['memory'].get('peak_bytes', 0)/2**30:.2f}")
+
+
+def main(argv=None, csv=print):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="")
+    args = ap.parse_args(argv)
+    path = args.json or (DEFAULT if os.path.exists(DEFAULT) else FALLBACK)
+    if not os.path.exists(path):
+        csv("dryrun_table,0,missing (run: python -m repro.launch.dryrun "
+            "--all --mesh both --json benchmarks/results/dryrun_final.jsonl)")
+        return
+    render(load(path), csv)
+
+
+if __name__ == "__main__":
+    main()

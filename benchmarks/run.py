@@ -1,0 +1,37 @@
+"""Benchmark aggregator: one section per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines."""
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-exact scales (1M x 500; slow on CPU)")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+
+    print("# --- paper Fig. 6: DML vs DML_Ray crossfit runtime ---")
+    from benchmarks import bench_crossfit
+    if args.full:
+        bench_crossfit.run(sizes=(10_000, 100_000, 1_000_000), p=500)
+    else:
+        bench_crossfit.run(sizes=(10_000, 30_000, 100_000), p=50)
+
+    print("# --- paper Fig. 5 / 5.2: distributed tuning ---")
+    from benchmarks import bench_tuning
+    bench_tuning.run(n=20_000, p=50, n_trials=8, n_folds=5)
+
+    print("# --- kernel micro-benchmarks ---")
+    from benchmarks import bench_kernels
+    bench_kernels.main()
+
+    print("# --- multi-pod dry-run roofline (deliverable e/g) ---")
+    from benchmarks import bench_dryrun
+    bench_dryrun.main([])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""The Dream11 scenario (paper §4): users are described by EVENT
+SEQUENCES, not tabular covariates.  An LM backbone (any of the 10
+assigned archs) embeds each user's sequence; the pooled features become
+the confounder set for fold-parallel DML.
+
+Synthetic setup with known ground truth: a user's event sequence encodes
+a latent 'engagement' score; engagement confounds both the treatment
+(receiving a promo) and the outcome (deposits).  The true effect is 2.0.
+
+    PYTHONPATH=src python examples/causal_backbone.py [--arch rwkv6-3b]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import CausalConfig
+from repro.configs import get_config
+from repro.core.dml import DML
+from repro.core.nuisance import backbone_features, make_nuisance
+from repro.models.model import build_model
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="rwkv6-3b",
+                help="backbone family (smoke variant is used)")
+ap.add_argument("--users", type=int, default=2048)
+ap.add_argument("--seq", type=int, default=32)
+args = ap.parse_args()
+
+key = jax.random.PRNGKey(0)
+cfg = get_config(args.arch + "-smoke")
+model = build_model(cfg)
+params = model.init(key)
+
+# ---- synthetic user event sequences with a latent engagement factor ----
+n, S = args.users, args.seq
+ks = jax.random.split(key, 6)
+engagement = jax.random.uniform(ks[0], (n,))  # in [0, 1)
+# engaged users emit the "deposit-screen" event (token 7) more often;
+# a mean-pooled embedding is then affine in engagement, so even an
+# UNTRAINED backbone's features identify the confounder
+special = jax.random.bernoulli(ks[1], engagement[:, None], (n, S))
+rand_tok = jax.random.randint(ks[5], (n, S), 8, cfg.vocab_size)
+tokens = jnp.where(special, 7, rand_tok).astype(jnp.int32)
+
+prop = jax.nn.sigmoid(3.0 * (engagement - 0.5))
+t = jax.random.bernoulli(ks[2], prop).astype(jnp.float32)
+y = 2.0 * t + 4.0 * engagement + 0.5 * jax.random.normal(ks[3], (n,))
+
+# ---- naive estimate is confounded ---------------------------------------
+naive = float((y * t).sum() / t.sum() - (y * (1 - t)).sum() / (1 - t).sum())
+print(f"naive difference-in-means  : {naive:+.3f}   (true effect +2.000)")
+
+# ---- backbone features -> fold-parallel DML ------------------------------
+print(f"embedding {n} user sequences with {args.arch} backbone ...")
+feats = backbone_features(model, params, tokens, batch_size=256)
+feats = (feats - feats.mean(0)) / (feats.std(0) + 1e-6)
+
+cfg_c = CausalConfig(n_folds=5, nuisance_y="ridge", nuisance_t="logistic",
+                     engine="parallel")
+res = DML(cfg_c).fit(y, t, feats, key=key)
+print(f"DML over backbone features : {res.ate:+.3f} "
+      f"± {float(res.stderr[0]):.3f}")
+print(res.summary())

@@ -1,0 +1,20 @@
+"""pixtral-12b — VLM: pixtral-ViT frontend (STUB: input_specs provides
+patch embeddings) + mistral-nemo decoder backbone
+[hf:mistralai/Pixtral-12B-2409]."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b",
+    family="vlm",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,  # explicit head_dim (nemo): 32*128 = 4096 != d_model
+    d_ff=14336,
+    vocab_size=131_072,
+    attention="gqa",
+    mlp="swiglu",
+    rope_theta=1_000_000_000.0,
+    patch_embed_dim=1024,  # pixtral ViT hidden size (stubbed frontend)
+)

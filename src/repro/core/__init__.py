@@ -1,0 +1,15 @@
+# The paper's primary contribution: distributed Double-ML.
+#   crossfit.py     C1 fold-parallel cross-fitting (+ sequential baseline)
+#   tuning.py       C2 population-axis hyper-parameter search
+#   dml.py          the estimator facade (DML / DML_Ray translation)
+#   nuisance.py     MXU-native nuisance zoo (ridge/logistic/MLP/backbone)
+#   final_stage.py  orthogonal moment via the fused residual_gram kernel
+#   refutation.py   NEXUS validation suite (placebo / RCC / subset)
+#   estimands.py    ATE/ATT/CATE summaries + diagnostics
+from repro.core.dml import DML, DMLResult  # noqa: F401
+from repro.core.crossfit import (crossfit, crossfit_parallel,  # noqa: F401
+    crossfit_parallel_loo, crossfit_sequential)
+from repro.core.nuisance import Nuisance, make_nuisance, make_ridge, make_logistic, make_mlp  # noqa: F401
+from repro.core.final_stage import cate_basis, fit_final_stage  # noqa: F401
+from repro.core.drlearner import DRLearner  # noqa: F401
+from repro.core.metalearners import s_learner, t_learner, x_learner  # noqa: F401

@@ -1,0 +1,132 @@
+"""Distributed cross-fitting — the paper's §5.1 contribution (C1).
+
+EconML runs the K out-of-fold nuisance fits as a sequential loop (or
+joblib threads); the paper's DML_Ray turns each fold into a Ray task.
+On a TPU pod the equivalent concurrency is *SPMD batching*: the K fits
+are stacked on a leading fold axis and vmapped into one compiled
+program — every fold trains simultaneously, sharing each row's bandwidth
+(fold masks select the complement), with GSPMD sharding rows over the
+``data`` mesh axis.  ``crossfit_sequential`` keeps the EconML-style loop
+as the runtime baseline for benchmarks/bench_crossfit (paper Fig. 6).
+
+Determinism: fold assignment and per-fold init keys derive from one base
+key — the lineage that makes checkpoint-restart replay exact (DESIGN §7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.nuisance import Nuisance
+from repro.distributed.sharding import constrain
+
+
+def fold_ids(key: jax.Array, n: int, k: int) -> jax.Array:
+    """Balanced random fold assignment in [0, k)."""
+    base = jnp.arange(n, dtype=jnp.int32) % k
+    return jax.random.permutation(key, base)
+
+
+def fold_weights(folds: jax.Array, k: int) -> jax.Array:
+    """(k, n) training weights: w[j, i] = 1.0 iff sample i is OUTSIDE
+    fold j (cross-fitting trains on the complement)."""
+    return (folds[None, :] != jnp.arange(k, dtype=folds.dtype)[:, None]
+            ).astype(jnp.float32)
+
+
+def _oof_select(preds_kn: jax.Array, folds: jax.Array) -> jax.Array:
+    """preds_kn: (k, n) predictions of every fold-model on every row.
+    Row i keeps the prediction of model folds[i] — its held-out model."""
+    return jnp.take_along_axis(preds_kn, folds[None, :], axis=0)[0]
+
+
+def crossfit_parallel(nuis: Nuisance, key: jax.Array, X: jax.Array,
+                      target: jax.Array, folds: jax.Array, k: int,
+                      rules=None) -> Tuple[jax.Array, Any]:
+    """C1: all K fold-fits in ONE batched program (the Ray-tasks
+    translation).  Returns (out-of-fold predictions (n,), states)."""
+    p = X.shape[1]
+    keys = jax.random.split(key, k)
+    states0 = jax.vmap(nuis.init, in_axes=(0, None))(keys, p)
+    W = fold_weights(folds, k)                      # (k, n)
+    states = jax.vmap(nuis.fit, in_axes=(0, None, None, 0))(
+        states0, X, target, W)
+    preds = jax.vmap(nuis.predict, in_axes=(0, None))(states, X)  # (k, n)
+    preds = constrain(preds, ("fold", "batch"), rules)
+    return _oof_select(preds, folds), states
+
+
+def crossfit_parallel_loo(nuis: Nuisance, key: jax.Array, X: jax.Array,
+                          target: jax.Array, folds: jax.Array, k: int,
+                          rules=None, mm_iters: int = 32):
+    """C1+ (beyond-paper, EXPERIMENTS §Perf): the leave-one-out Gram
+    identity collapses the K complement fits to ONE pass over X.  Exact
+    for ridge; fixed-majorizer MM for logistic (same optimum).  Falls
+    back to the vmap engine for non-linear nuisances."""
+    from repro.core.nuisance import logistic_fit_folds, ridge_fit_folds
+    p = X.shape[1]
+    lam = (nuis.init(key, p)["lam"]
+           if nuis.name in ("ridge", "logistic") else 0.0)
+    if nuis.name == "ridge":
+        states = ridge_fit_folds(lam, X, target, folds, k)
+    elif nuis.name == "logistic":
+        states = logistic_fit_folds(lam, mm_iters, X, target, folds, k)
+    else:
+        return crossfit_parallel(nuis, key, X, target, folds, k, rules)
+    preds = jax.vmap(nuis.predict, in_axes=(0, None))(states, X)
+    preds = constrain(preds, ("fold", "batch"), rules)
+    return _oof_select(preds, folds), states
+
+
+def crossfit_sequential(nuis: Nuisance, key: jax.Array, X: jax.Array,
+                        target: jax.Array, folds: jax.Array, k: int
+                        ) -> Tuple[jax.Array, list]:
+    """EconML-style baseline: one fit per fold, strictly in sequence
+    (each fold is its own compiled program, like one Ray-less worker)."""
+    n = X.shape[0]
+    W = fold_weights(folds, k)
+    oof = jnp.zeros((n,), jnp.float32)
+    states = []
+    fit = jax.jit(nuis.fit)
+    predict = jax.jit(nuis.predict)
+    for j in range(k):
+        st = fit(nuis.init(jax.random.fold_in(key, j), X.shape[1]),
+                 X, target, W[j])
+        pj = predict(st, X)
+        oof = jnp.where(folds == j, pj, oof)
+        states.append(st)
+    return oof, states
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossfitResult:
+    oof_y: jax.Array      # (n,) out-of-fold E[Y|X]
+    oof_t: jax.Array      # (n,) out-of-fold E[T|X] (propensity if binary)
+    folds: jax.Array      # (n,) fold assignment
+    states_y: Any
+    states_t: Any
+
+
+def crossfit(nuis_y: Nuisance, nuis_t: Nuisance, key: jax.Array,
+             X: jax.Array, y: jax.Array, t: jax.Array, k: int,
+             engine: str = "parallel", rules=None) -> CrossfitResult:
+    """Cross-fit both nuisances.  engine: "parallel" (paper) runs the
+    2·K fits concurrently; "sequential" (EconML baseline) loops."""
+    kf, ky, kt = jax.random.split(key, 3)
+    folds = fold_ids(kf, X.shape[0], k)
+    if engine == "parallel":
+        oof_y, st_y = crossfit_parallel(nuis_y, ky, X, y, folds, k, rules)
+        oof_t, st_t = crossfit_parallel(nuis_t, kt, X, t, folds, k, rules)
+    elif engine == "parallel_loo":
+        oof_y, st_y = crossfit_parallel_loo(nuis_y, ky, X, y, folds, k, rules)
+        oof_t, st_t = crossfit_parallel_loo(nuis_t, kt, X, t, folds, k, rules)
+    elif engine == "sequential":
+        oof_y, st_y = crossfit_sequential(nuis_y, ky, X, y, folds, k)
+        oof_t, st_t = crossfit_sequential(nuis_t, kt, X, t, folds, k)
+    else:
+        raise ValueError(engine)
+    return CrossfitResult(oof_y=oof_y, oof_t=oof_t, folds=folds,
+                          states_y=st_y, states_t=st_t)

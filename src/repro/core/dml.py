@@ -1,0 +1,110 @@
+"""Double/Debiased ML estimator (Chernozhukov et al. 2018) — the
+algorithm the paper scales.  ``DML(engine="parallel")`` is the paper's
+DML_Ray translated to SPMD; ``engine="sequential"`` is the EconML
+baseline it benchmarks against (both produce identical estimates up to
+fold-init PRNG; tests assert the equivalence).
+
+Usage (mirrors the paper's §5.1 listing):
+
+    est = DML(CausalConfig(n_folds=5, nuisance_y="ridge",
+                           nuisance_t="logistic", engine="parallel"))
+    res = est.fit(y, t, X=X, key=jax.random.PRNGKey(0))
+    res.ate, res.stderr, res.cate(X_new)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import CausalConfig
+from repro.core.crossfit import CrossfitResult, crossfit
+from repro.core.estimands import Diagnostics, compute_diagnostics
+from repro.core.final_stage import FinalStageResult, cate_basis, fit_final_stage
+from repro.core.nuisance import Nuisance, make_nuisance
+
+
+@dataclasses.dataclass(frozen=True)
+class DMLResult:
+    theta: jax.Array             # (p_phi,) final-stage coefficients
+    cov: jax.Array               # (p_phi, p_phi)
+    cfg: CausalConfig
+    crossfit: CrossfitResult
+    final: FinalStageResult
+    diagnostics: Diagnostics
+
+    @property
+    def ate(self) -> float:
+        """With phi = [1, x...], theta[0] is the effect at x = 0; for the
+        constant basis it IS the ATE.  For heterogeneous bases use
+        ``cate(X).mean()``."""
+        return float(self.theta[0])
+
+    @property
+    def stderr(self) -> jax.Array:
+        return jnp.sqrt(jnp.diag(self.cov))
+
+    def cate(self, X: jax.Array) -> jax.Array:
+        phi = cate_basis(X, self.cfg.cate_features)
+        return phi @ self.theta
+
+    def ate_of(self, X: jax.Array) -> float:
+        return float(self.cate(X).mean())
+
+    def conf_int(self, alpha: float = 0.05):
+        z = 1.959963984540054 if alpha == 0.05 else \
+            float(jax.scipy.stats.norm.ppf(1 - alpha / 2))
+        se = self.stderr
+        return self.theta - z * se, self.theta + z * se
+
+    def summary(self) -> str:
+        lo, hi = self.conf_int()
+        lines = ["DML result", "-" * 46,
+                 f"{'coef':>4} {'point':>10} {'stderr':>10} "
+                 f"{'ci_lo':>9} {'ci_hi':>9}"]
+        for i in range(self.theta.shape[0]):
+            lines.append(f"θ[{i}] {float(self.theta[i]):>10.4f} "
+                         f"{float(self.stderr[i]):>10.4f} "
+                         f"{float(lo[i]):>9.4f} {float(hi[i]):>9.4f}")
+        d = self.diagnostics
+        lines += ["-" * 46,
+                  f"ortho-moment |E[e·rt]| = {d.ortho_moment:.2e}",
+                  f"overlap: propensity in [{d.min_propensity:.3f}, "
+                  f"{d.max_propensity:.3f}]",
+                  f"nuisance R²(y) = {d.nuisance_r2_y:.3f}"]
+        return "\n".join(lines)
+
+
+class DML:
+    """The estimator facade.  Nuisances default from the CausalConfig;
+    pass explicit ``Nuisance`` objects to override (e.g. tuned models
+    from repro.core.tuning, or backbone-feature heads)."""
+
+    def __init__(self, cfg: CausalConfig,
+                 nuisance_y: Optional[Nuisance] = None,
+                 nuisance_t: Optional[Nuisance] = None,
+                 rules=None):
+        self.cfg = cfg
+        t_task = "clf" if cfg.discrete_treatment else "reg"
+        self.nuis_y = nuisance_y or make_nuisance(cfg.nuisance_y, "reg", cfg)
+        self.nuis_t = nuisance_t or make_nuisance(cfg.nuisance_t, t_task, cfg)
+        self.rules = rules
+
+    def fit(self, y: jax.Array, t: jax.Array, X: jax.Array,
+            W: Optional[jax.Array] = None,
+            key: Optional[jax.Array] = None) -> DMLResult:
+        """y, t: (n,); X: (n, p) effect-relevant covariates; W: optional
+        extra controls (concatenated for nuisance fitting only, exactly
+        EconML's X/W split)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        XW = X if W is None else jnp.concatenate([X, W], axis=1)
+        cf = crossfit(self.nuis_y, self.nuis_t, key, XW, y, t,
+                      self.cfg.n_folds, self.cfg.engine, self.rules)
+        phi = cate_basis(X, self.cfg.cate_features)
+        fs = fit_final_stage(y, t, cf.oof_y, cf.oof_t, phi)
+        theta_at_x = phi @ fs.theta
+        diag = compute_diagnostics(y, t, cf.oof_y, cf.oof_t, theta_at_x)
+        return DMLResult(theta=fs.theta, cov=fs.cov, cfg=self.cfg,
+                         crossfit=cf, final=fs, diagnostics=diag)

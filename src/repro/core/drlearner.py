@@ -1,0 +1,102 @@
+"""Doubly-Robust (AIPW) learner — the DR baseline the paper cites
+(§2.2, Foster & Syrgkanis 2019) built on the same fold-parallel
+cross-fitting engine as DML.
+
+Pseudo-outcome (binary treatment):
+
+    ψ_i = m1(x_i) - m0(x_i)
+        + t_i (y_i - m1(x_i)) / e(x_i)
+        - (1 - t_i)(y_i - m0(x_i)) / (1 - e(x_i))
+
+with cross-fit outcome models m_t(x) = E[Y|X,T=t] and propensity
+e(x) = P(T=1|X).  ATE = mean(ψ); CATE = regress ψ on phi(x).
+Consistent if EITHER the outcome models or the propensity is consistent
+(double robustness).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import CausalConfig
+from repro.core.crossfit import fold_ids, fold_weights, _oof_select
+from repro.core.final_stage import cate_basis
+from repro.core.nuisance import Nuisance, make_logistic, make_ridge
+
+
+@dataclasses.dataclass(frozen=True)
+class DRResult:
+    ate: float
+    stderr: float
+    theta: jax.Array          # CATE coefficients on phi(x)
+    pseudo: jax.Array         # (n,) AIPW pseudo-outcomes
+
+    def cate(self, X: jax.Array, n_features: int) -> jax.Array:
+        return cate_basis(X, n_features) @ self.theta
+
+    def conf_int(self, z: float = 1.96):
+        return self.ate - z * self.stderr, self.ate + z * self.stderr
+
+
+class DRLearner:
+    """fit(y, t, X) with 3 cross-fit nuisances (m0, m1, e)."""
+
+    def __init__(self, cfg: CausalConfig,
+                 outcome: Optional[Nuisance] = None,
+                 propensity: Optional[Nuisance] = None,
+                 clip: float = 0.01):
+        self.cfg = cfg
+        self.outcome = outcome or make_ridge(cfg.ridge_lambda)
+        self.propensity = propensity or make_logistic(cfg.ridge_lambda,
+                                                      cfg.newton_iters)
+        self.clip = clip
+
+    def _crossfit_outcome_arm(self, key, X, y, t, folds, arm: int):
+        """Cross-fit E[Y|X, T=arm]: train weights select the complement
+        AND the arm."""
+        k = self.cfg.n_folds
+        W = fold_weights(folds, k)
+        arm_mask = (t == arm).astype(jnp.float32)[None, :]
+        keys = jax.random.split(key, k)
+        states0 = jax.vmap(self.outcome.init, in_axes=(0, None))(
+            keys, X.shape[1])
+        states = jax.vmap(self.outcome.fit, in_axes=(0, None, None, 0))(
+            states0, X, y, W * arm_mask)
+        preds = jax.vmap(self.outcome.predict, in_axes=(0, None))(states, X)
+        return _oof_select(preds, folds)
+
+    def fit(self, y: jax.Array, t: jax.Array, X: jax.Array,
+            key: Optional[jax.Array] = None) -> DRResult:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        kf, k0, k1, ke = jax.random.split(key, 4)
+        n = X.shape[0]
+        k = self.cfg.n_folds
+        folds = fold_ids(kf, n, k)
+        tt = t.astype(jnp.float32)
+
+        m0 = self._crossfit_outcome_arm(k0, X, y, tt, folds, 0)
+        m1 = self._crossfit_outcome_arm(k1, X, y, tt, folds, 1)
+
+        W = fold_weights(folds, k)
+        keys = jax.random.split(ke, k)
+        st0 = jax.vmap(self.propensity.init, in_axes=(0, None))(
+            keys, X.shape[1])
+        st = jax.vmap(self.propensity.fit, in_axes=(0, None, None, 0))(
+            st0, X, tt, W)
+        e = _oof_select(jax.vmap(self.propensity.predict,
+                                 in_axes=(0, None))(st, X), folds)
+        e = jnp.clip(e, self.clip, 1.0 - self.clip)
+
+        psi = (m1 - m0
+               + tt * (y - m1) / e
+               - (1.0 - tt) * (y - m0) / (1.0 - e))
+        ate = float(psi.mean())
+        se = float(psi.std(ddof=1) / jnp.sqrt(n))
+
+        phi = cate_basis(X, self.cfg.cate_features)
+        G = phi.T @ phi + 1e-8 * n * jnp.eye(phi.shape[1])
+        theta = jnp.linalg.solve(G, phi.T @ psi)
+        return DRResult(ate=ate, stderr=se, theta=theta, pseudo=psi)

@@ -1,0 +1,53 @@
+"""Estimand summaries + orthogonality/overlap diagnostics (the NEXUS
+'integrated validation' features, paper §4)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostics:
+    resid_y_mean: float      # E[ry] ≈ 0 if m_y unbiased
+    resid_t_mean: float      # E[rt] ≈ 0 if m_t unbiased
+    resid_corr: float        # corr(ry, rt) pre-final-stage
+    ortho_moment: float      # |E[(ry - θ·rt)·rt]| ≈ 0 (Neyman orthogonality)
+    min_propensity: float    # overlap (assumption 3)
+    max_propensity: float
+    nuisance_r2_y: float     # 1 - Var(ry)/Var(y)
+    nuisance_auc_proxy: float  # mean |mt - 0.5|·2 (separation proxy)
+
+    def rows(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def compute_diagnostics(y, t, my, mt, theta_at_x, rt_clip: float = 1e-9
+                        ) -> Diagnostics:
+    f32 = jnp.float32
+    ry = (y - my).astype(f32)
+    rt = (t - mt).astype(f32)
+    e = ry - theta_at_x.astype(f32) * rt
+    corr = jnp.corrcoef(jnp.stack([ry, rt]))[0, 1]
+    var_y = jnp.maximum(jnp.var(y.astype(f32)), rt_clip)
+    return Diagnostics(
+        resid_y_mean=float(ry.mean()),
+        resid_t_mean=float(rt.mean()),
+        resid_corr=float(corr),
+        ortho_moment=float(jnp.abs((e * rt).mean())),
+        min_propensity=float(mt.min()),
+        max_propensity=float(mt.max()),
+        nuisance_r2_y=float(1.0 - jnp.var(ry) / var_y),
+        nuisance_auc_proxy=float((jnp.abs(mt - 0.5) * 2).mean()),
+    )
+
+
+def ate_from_cate(cate: jax.Array) -> float:
+    return float(cate.mean())
+
+
+def att_from_cate(cate: jax.Array, t: jax.Array) -> float:
+    tw = t.astype(jnp.float32)
+    return float((cate * tw).sum() / jnp.maximum(tw.sum(), 1.0))

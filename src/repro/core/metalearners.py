@@ -1,0 +1,81 @@
+"""Metalearners (Künzel et al. 2019) — the S/T/X baselines the paper
+cites in §2.2, built on the nuisance zoo so the same fold/population
+batching applies.
+
+  S-learner: one model of E[Y | X, T];  τ(x) = f(x,1) - f(x,0)
+  T-learner: per-arm models;            τ(x) = m1(x) - m0(x)
+  X-learner: imputed per-arm effects blended by the propensity
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import CausalConfig
+from repro.core.nuisance import Nuisance, make_logistic, make_ridge
+
+
+@dataclasses.dataclass(frozen=True)
+class MetaResult:
+    ate: float
+    cate: jax.Array  # (n,)
+
+
+def _fit_predict(nuis: Nuisance, key, X, y, w, X_eval):
+    st = nuis.fit(nuis.init(key, X.shape[1]), X, y, w)
+    return nuis.predict(st, X_eval)
+
+
+def s_learner(y, t, X, *, nuisance: Optional[Nuisance] = None,
+              key=None) -> MetaResult:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    nuis = nuisance or make_ridge(1e-3)
+    tt = t.astype(jnp.float32)[:, None]
+    Xt = jnp.concatenate([X, tt, X * tt], axis=1)  # treatment interactions
+    ones = jnp.ones((X.shape[0],), jnp.float32)
+    st = nuis.fit(nuis.init(key, Xt.shape[1]), Xt, y, ones)
+    X1 = jnp.concatenate([X, jnp.ones_like(tt), X], axis=1)
+    X0 = jnp.concatenate([X, jnp.zeros_like(tt), jnp.zeros_like(X)], axis=1)
+    cate = nuis.predict(st, X1) - nuis.predict(st, X0)
+    return MetaResult(ate=float(cate.mean()), cate=cate)
+
+
+def t_learner(y, t, X, *, nuisance: Optional[Nuisance] = None,
+              key=None) -> MetaResult:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    nuis = nuisance or make_ridge(1e-3)
+    k0, k1 = jax.random.split(key)
+    tt = t.astype(jnp.float32)
+    m1 = _fit_predict(nuis, k1, X, y, tt, X)
+    m0 = _fit_predict(nuis, k0, X, y, 1.0 - tt, X)
+    cate = m1 - m0
+    return MetaResult(ate=float(cate.mean()), cate=cate)
+
+
+def x_learner(y, t, X, *, nuisance: Optional[Nuisance] = None,
+              propensity: Optional[Nuisance] = None, key=None,
+              clip: float = 0.01) -> MetaResult:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    nuis = nuisance or make_ridge(1e-3)
+    prop = propensity or make_logistic(1e-3)
+    k0, k1, k2, k3, ke = jax.random.split(key, 5)
+    tt = t.astype(jnp.float32)
+
+    # stage 1: per-arm outcome models
+    m1 = _fit_predict(nuis, k1, X, y, tt, X)
+    m0 = _fit_predict(nuis, k0, X, y, 1.0 - tt, X)
+
+    # stage 2: imputed individual effects, learned per arm
+    d_treated = y - m0          # valid on treated rows
+    d_control = m1 - y          # valid on control rows
+    tau1 = _fit_predict(nuis, k2, X, d_treated, tt, X)
+    tau0 = _fit_predict(nuis, k3, X, d_control, 1.0 - tt, X)
+
+    # stage 3: propensity-weighted blend
+    ones = jnp.ones((X.shape[0],), jnp.float32)
+    e = jnp.clip(_fit_predict(prop, ke, X, tt, ones, X), clip, 1 - clip)
+    cate = e * tau0 + (1.0 - e) * tau1
+    return MetaResult(ate=float(cate.mean()), cate=cate)

@@ -1,0 +1,10 @@
+from repro.distributed.sharding import (  # noqa: F401
+    ParamDef,
+    ShardingRules,
+    default_rules,
+    init_params,
+    logical_to_spec,
+    param_shardings,
+    param_specs,
+    tree_size_bytes,
+)

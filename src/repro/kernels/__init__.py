@@ -1,0 +1,8 @@
+# Pallas TPU kernels (validated with interpret=True on CPU).
+# Each kernel directory ships kernel.py (pl.pallas_call + BlockSpec),
+# ops.py (jit'd dispatch wrapper) and ref.py (pure-jnp oracle).
+#
+# Hot spots covered (see DESIGN.md §6):
+#   flash_attention/  tiled online-softmax attention (prefill/train)
+#   residual_gram/    fused residualize->Gram for the DML final stage
+#   ssm_scan/         chunked gated-linear-attention scan (mamba2/rwkv6)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: tiled online-softmax (flash) attention, GQA-aware.
+
+Grid: (B, H, Sq/block_q, Sk/block_k) — the key axis is minor/sequential;
+running max / normalizer / output accumulator live in VMEM scratch across
+key iterations (flash-attention-2 schedule).
+
+VMEM working set (fp32 accumulators, bf16 tiles):
+  q tile        block_q * D
+  k,v tiles     2 * block_k * D
+  acc scratch   block_q * D   (f32)
+  m,l scratch   2 * block_q   (f32)
+  scores        block_q * block_k
+With block_q=block_k=128 and D=128: ~0.7 MiB << 16 MiB VMEM; block sizes
+are multiples of 128 to keep the MXU contraction dims aligned.
+
+Causal handling: blocks entirely above the diagonal skip the matmul
+(pl.when) — per-element masking only on the diagonal blocks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *, scale,
+               causal, softcap, block_q, block_k, n_k):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        s = (q @ k.T) * scale  # (bq, bk)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        if causal:
+            qi = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            ki = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(qi >= ki, s, NEG_INF)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc[...] = acc[...] * alpha + p @ v
+        m_s[...] = m_new
+
+    if causal:
+        # skip key blocks strictly above the causal diagonal
+        pl.when(q_start + block_q - 1 >= k_start)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True, softcap: float = 0.0,
+                           scale: Optional[float] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B,H,Sq,D); k,v: (B,KV,Sk,D). Returns (B,H,Sq,D)."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    n_k = Sk // block_k
+    sc = scale if scale is not None else 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(
+        _fa_kernel, scale=sc, causal=causal, softcap=softcap,
+        block_q=block_q, block_k=block_k, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, Sq // block_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,42 @@
+"""Jit'd dispatch wrapper for flash attention.
+
+Model code passes (B,S,H,D) layout; this wrapper transposes to the
+kernel's (B,H,S,D) layout and picks a backend:
+  "ref"       dense jnp oracle (CPU / dry-run path — same FLOP count)
+  "pallas"    compiled Pallas TPU kernel (production)
+  "interpret" Pallas body interpreted on CPU (tests)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention import kernel as _kernel
+from repro.kernels.flash_attention import ref as _ref
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "softcap", "scale",
+                                             "backend", "block_q", "block_k"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, softcap: float = 0.0,
+                    scale: Optional[float] = None, backend: str = "",
+                    block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """q: (B,Sq,H,D); k,v: (B,Sk,KV,D). Returns (B,Sq,H,D)."""
+    be = backend or default_backend()
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if be == "ref":
+        o = _ref.attention_ref(qt, kt, vt, causal=causal, softcap=softcap,
+                               scale=scale)
+    else:
+        o = _kernel.flash_attention_pallas(
+            qt, kt, vt, causal=causal, softcap=softcap, scale=scale,
+            block_q=block_q, block_k=block_k, interpret=(be == "interpret"))
+    return o.transpose(0, 2, 1, 3)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for flash attention (GQA-aware, causal, softcap)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, softcap: float = 0.0,
+                  scale: Optional[float] = None) -> jax.Array:
+    """q: (B,H,Sq,D); k,v: (B,KV,Sk,D); H % KV == 0. Returns (B,H,Sq,D)."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    sc = scale if scale is not None else 1.0 / (D ** 0.5)
+    qg = q.reshape(B, KV, G, Sq, D).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32)) * sc
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.residual_gram.ops import residual_gram  # noqa: F401

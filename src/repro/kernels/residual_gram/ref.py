@@ -1,0 +1,30 @@
+"""Pure-jnp oracle: fused residualize -> Gram moments for the DML final
+stage (Neyman-orthogonal normal equations).
+
+Given outcomes y, treatments t, cross-fit nuisance predictions my, mt and
+CATE features phi:
+    ry = y - my                       (outcome residual)
+    rt = t - mt                       (treatment residual)
+    Z  = rt[:, None] * phi            (n, p)
+    G  = Z^T Z                        (p, p)
+    b  = Z^T ry                       (p,)
+theta = G^{-1} b  solves  min_theta  sum_i (ry_i - <theta, phi_i> rt_i)^2,
+whose FOC is the orthogonal moment  E[(ry - theta(x) rt) rt phi(x)] = 0.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def residual_gram_ref(y: jax.Array, t: jax.Array, my: jax.Array,
+                      mt: jax.Array, phi: jax.Array
+                      ) -> Tuple[jax.Array, jax.Array]:
+    ry = (y - my).astype(jnp.float32)
+    rt = (t - mt).astype(jnp.float32)
+    z = rt[:, None] * phi.astype(jnp.float32)
+    gram = z.T @ z
+    vec = z.T @ ry
+    return gram, vec

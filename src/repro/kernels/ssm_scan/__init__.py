@@ -1,0 +1,1 @@
+from repro.kernels.ssm_scan.ops import gla, gla_decode_step  # noqa: F401

@@ -1,0 +1,201 @@
+"""Pallas TPU kernel: chunked gated-linear-attention scan.
+
+Grid: (B*H, T/chunk) — the chunk axis is the minor (sequential) grid
+dimension, so the (Dk,Dv) running state lives in a VMEM scratch that
+persists across chunk iterations (reset at chunk==0 for each new b*h).
+
+VMEM working set per iteration (fp32):
+  q,k,w tiles     3 * chunk * Dk
+  v,o tiles       2 * chunk * Dv
+  state scratch   Dk * Dv
+  chunk matmuls   chunk^2 (scores)
+With chunk=128, Dk=Dv=128: ~ 0.46 MiB — far under the ~16 MiB/core VMEM
+budget; chunk and Dk/Dv are MXU-aligned multiples of (8,128) whenever the
+model dims allow.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _chunk_math(q, k, v, w, state, bonus_u=None):
+    """Shared intra-chunk math. All fp32. q,k,w: (C,Dk); v: (C,Dv);
+    state: (Dk,Dv). Returns (o, new_state).
+
+    Stability: the intra-chunk ``k·exp(-cum)`` factor is bounded by the
+    per-step decay contract (ref.MAX_LOG_DECAY × chunk); the cross-chunk
+    state flow uses ``k·exp(cum_last - cum)`` whose exponent is <= 0 —
+    stable for arbitrarily strong decay.
+    """
+    C = q.shape[0]
+    logw = jnp.log(jnp.maximum(w, 1e-22))
+    cum_incl = jnp.cumsum(logw, axis=0)
+    w_total = jnp.exp(cum_incl[-1])
+    k_t = k * jnp.exp(-cum_incl)                          # intra-chunk pairing
+    k_flow = k * jnp.exp(cum_incl[-1][None] - cum_incl)   # state flow (<=1)
+    if bonus_u is None:  # mamba2 / SSD: read state post-update
+        q_t = q * jnp.exp(cum_incl)
+        mask = jnp.tril(jnp.ones((C, C), jnp.bool_))
+    else:  # rwkv6: read pre-update state + u-weighted current token
+        q_t = q * jnp.exp(cum_incl - logw)
+        mask = jnp.tril(jnp.ones((C, C), jnp.bool_), k=-1)
+    scores = jnp.where(mask, q_t @ k_t.T, 0.0)
+    o = scores @ v + q_t @ state
+    if bonus_u is not None:
+        diag = jnp.sum(q * bonus_u[None, :] * k, axis=-1, keepdims=True)
+        o = o + diag * v
+    new_state = w_total[:, None] * state + k_flow.T @ v
+    return o, new_state
+
+
+def _kernel_post(q_ref, k_ref, v_ref, w_ref, o_ref, s_ref, state):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    o, new_state = _chunk_math(
+        q_ref[0].astype(jnp.float32), k_ref[0].astype(jnp.float32),
+        v_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        state[...], None)
+    state[...] = new_state
+    o_ref[0] = o.astype(o_ref.dtype)
+    s_ref[0] = new_state.astype(s_ref.dtype)
+
+
+def _kernel_bonus(q_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, state):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    o, new_state = _chunk_math(
+        q_ref[0].astype(jnp.float32), k_ref[0].astype(jnp.float32),
+        v_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        state[...], u_ref[0].astype(jnp.float32))
+    state[...] = new_state
+    o_ref[0] = o.astype(o_ref.dtype)
+    s_ref[0] = new_state.astype(s_ref.dtype)
+
+
+def gla_pallas(q: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: Optional[jax.Array] = None, *, chunk: int = 64,
+               interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """q,k,w: (B,H,T,Dk); v: (B,H,T,Dv); u: (H,Dk) or None.
+    Returns (o (B,H,T,Dv), final_state (B,H,Dk,Dv))."""
+    B, H, T, Dk = q.shape
+    Dv = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    n = T // chunk
+    BH = B * H
+
+    def flat(x):
+        return x.reshape(BH, T, x.shape[-1])
+
+    qf, kf, vf, wf = map(flat, (q, k, v, w))
+
+    tile_k = pl.BlockSpec((1, chunk, Dk), lambda i, j: (i, j, 0))
+    tile_v = pl.BlockSpec((1, chunk, Dv), lambda i, j: (i, j, 0))
+    out_o = pl.BlockSpec((1, chunk, Dv), lambda i, j: (i, j, 0))
+    out_s = pl.BlockSpec((1, Dk, Dv), lambda i, j: (i, 0, 0))
+
+    in_specs = [tile_k, tile_k, tile_v, tile_k]
+    operands = [qf, kf, vf, wf]
+    body = _kernel_post
+    if u is not None:
+        in_specs.append(pl.BlockSpec((1, Dk), lambda i, j: (i % H, 0)))
+        operands.append(u)
+        body = _kernel_bonus
+
+    o, s = pl.pallas_call(
+        body,
+        grid=(BH, n),
+        in_specs=in_specs,
+        out_specs=[out_o, out_s],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, Dv), v.dtype),
+            jax.ShapeDtypeStruct((BH, Dk, Dv), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((Dk, Dv), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+    return o.reshape(B, H, T, Dv), s.reshape(B, H, Dk, Dv)
+
+
+# ---------------------------------------------------------------------------
+# SSD-mode kernel (Mamba2): head-shared q/k, per-head scalar decay.
+# Grid: (B*H, T/chunk); q/k tiles are indexed by batch only (shared
+# across the H grid rows), so HBM reads of B/C happen once per batch, not
+# once per head.  The (C,C) L-matrix is built from non-positive cumsum
+# differences — stable for any decay, allowing MXU-sized chunks.
+# VMEM per step (fp32): q,k 2·C·N + v,o 2·C·P + L,scores 2·C² + state N·P
+#   C=64, N=64, P=64: ~0.2 MiB.
+# ---------------------------------------------------------------------------
+
+def _ssd_kernel(q_ref, k_ref, v_ref, a_ref, o_ref, s_ref, state):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    q = q_ref[0].astype(jnp.float32)          # (C, N)
+    k = k_ref[0].astype(jnp.float32)          # (C, N)
+    v = v_ref[0].astype(jnp.float32)          # (C, P)
+    a = a_ref[0].astype(jnp.float32)          # (C,)
+    C = q.shape[0]
+
+    loga = jnp.log(jnp.maximum(a, 1e-37))
+    cum = jnp.cumsum(loga)
+    scores = q @ k.T                          # shared-head scores
+    diff = cum[:, None] - cum[None, :]
+    mask = jnp.tril(jnp.ones((C, C), jnp.bool_))
+    L = jnp.where(mask, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    o = (scores * L) @ v + (q * jnp.exp(cum)[:, None]) @ state[...]
+    flow = jnp.exp(cum[-1] - cum)
+    new_state = jnp.exp(cum[-1]) * state[...] + (k * flow[:, None]).T @ v
+    state[...] = new_state
+    o_ref[0] = o.astype(o_ref.dtype)
+    s_ref[0] = new_state.astype(s_ref.dtype)
+
+
+def ssd_pallas(q: jax.Array, k: jax.Array, v: jax.Array, a: jax.Array, *,
+               chunk: int = 64, interpret: bool = True):
+    """q,k: (B,T,N); v: (B,H,T,P); a: (B,H,T).
+    Returns (o (B,H,T,P), final_state (B,H,N,P))."""
+    B, T, N = q.shape
+    H, P = v.shape[1], v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    n = T // chunk
+    BH = B * H
+    vf = v.reshape(BH, T, P)
+    af = a.reshape(BH, T)
+
+    o, s = pl.pallas_call(
+        _ssd_kernel,
+        grid=(BH, n),
+        in_specs=[
+            pl.BlockSpec((1, chunk, N), lambda i, j: (i // H, j, 0)),
+            pl.BlockSpec((1, chunk, N), lambda i, j: (i // H, j, 0)),
+            pl.BlockSpec((1, chunk, P), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, P), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, N, P), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, P), v.dtype),
+            jax.ShapeDtypeStruct((BH, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(q, k, vf, af)
+    return o.reshape(B, H, T, P), s.reshape(B, H, N, P)

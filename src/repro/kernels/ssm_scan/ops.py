@@ -1,0 +1,62 @@
+"""Jit'd dispatch wrapper for the GLA scan kernel.
+
+backend:
+  "ref"       pure-jnp chunked oracle (CPU default — fast XLA path)
+  "pallas"    compiled Pallas TPU kernel (production)
+  "interpret" Pallas kernel body interpreted on CPU (correctness tests)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan import ref as _ref
+from repro.kernels.ssm_scan import kernel as _kernel
+
+
+def default_backend() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "backend"))
+def gla(q: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+        u: Optional[jax.Array] = None, *, chunk: int = 64,
+        backend: str = "ref") -> Tuple[jax.Array, jax.Array]:
+    """Gated-linear-attention scan. See ssm_scan.ref for semantics."""
+    T = q.shape[2]
+    while chunk > 1 and T % chunk:
+        chunk //= 2
+    if backend == "pallas":
+        return _kernel.gla_pallas(q, k, v, w, u, chunk=chunk, interpret=False)
+    if backend == "interpret":
+        return _kernel.gla_pallas(q, k, v, w, u, chunk=chunk, interpret=True)
+    return _ref.gla_chunked_ref(q, k, v, w, u, chunk=chunk)
+
+
+def gla_decode_step(state: jax.Array, q, k, v, w, u=None):
+    """Single-token state update for serving (no kernel needed: one
+    rank-1 update + readout, bandwidth-bound)."""
+    return _ref.gla_step(state, q, k, v, w, u)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "backend"))
+def ssd(q: jax.Array, k: jax.Array, v: jax.Array, a: jax.Array, *,
+        chunk: int = 32, backend: str = "ref"):
+    """Mamba2 SSD scan (B/C shared across heads, scalar per-head decay).
+    q,k: (B,T,N); v: (B,H,T,P); a: (B,H,T).  See ssm_scan.ref."""
+    T = q.shape[1]
+    while chunk > 1 and T % chunk:
+        chunk //= 2
+    if backend in ("pallas", "interpret"):
+        from repro.kernels.ssm_scan import kernel as _kernel
+        return _kernel.ssd_pallas(q, k, v, a, chunk=chunk,
+                                  interpret=(backend == "interpret"))
+    return _ref.ssd_chunked_ref(q, k, v, a, chunk=chunk)
+
+
+def ssd_decode_step(state, q, k, v, a):
+    """Single-token SSD update (serving)."""
+    return _ref.ssd_step(state, q, k, v, a)

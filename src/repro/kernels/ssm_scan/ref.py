@@ -1,0 +1,215 @@
+"""Pure-jnp oracle for the chunked gated-linear-attention (GLA) scan.
+
+Covers both assigned recurrence families:
+- Mamba2 / SSD ("post" mode, u=None):   S_t = diag(w_t) S_{t-1} + k_t v_t^T
+                                        o_t = q_t S_t
+- RWKV-6 ("bonus" mode, u given):       o_t = q_t (S_{t-1} + diag(u) k_t v_t^T)
+                                        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Shapes: q,k,w (B,H,T,Dk); v (B,H,T,Dv); u (H,Dk) or None.
+w is the per-step multiplicative decay in (0,1].
+
+Numerical contract (enforced by the model layers, see DESIGN.md §6):
+``w >= exp(-MAX_LOG_DECAY)`` per step.  The chunked form factors the
+intra-chunk pairwise decay as ``(q·exp(cum)) @ (k·exp(-cum))^T``; the
+``exp(-cum)`` factor is bounded by ``exp(chunk · MAX_LOG_DECAY)``, which
+with chunk=16 and MAX_LOG_DECAY=3.49 stays ~1e24 — safely inside fp32.
+The cross-chunk state flow uses only non-positive exponents (stable for
+any w).  A per-step decay floor of exp(-3.49)≈0.03 means a 16-step span
+decays by ~1e-24 — a full state reset — so the clamp is functionally
+inert while guaranteeing finite arithmetic.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# Per-step decay-rate bound: w >= exp(-MAX_LOG_DECAY).  Model layers clamp
+# their decay parametrization to honor this (rwkv6 omega, mamba2 dt).
+MAX_LOG_DECAY = 3.49
+
+
+def gla_step(state: jax.Array, q, k, v, w, u=None):
+    """Single-token recurrence (decode path). state: (..., Dk, Dv)."""
+    kv = k[..., :, None] * v[..., None, :]
+    if u is None:
+        state = state * w[..., :, None] + kv
+        o = jnp.einsum("...k,...kv->...v", q, state)
+    else:
+        o = jnp.einsum("...k,...kv->...v", q, state + u[..., :, None] * kv)
+        state = state * w[..., :, None] + kv
+    return state, o
+
+
+def gla_naive(q, k, v, w, u=None, initial_state=None):
+    """Token-by-token recurrence — the ground-truth oracle for tests."""
+    B, H, T, Dk = q.shape
+    Dv = v.shape[-1]
+    s0 = (jnp.zeros((B, H, Dk, Dv), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def body(state, xs):
+        qt, kt, vt, wt = xs
+        state, o = gla_step(state, qt.astype(jnp.float32), kt.astype(jnp.float32),
+                            vt.astype(jnp.float32), wt.astype(jnp.float32),
+                            None if u is None else u.astype(jnp.float32))
+        return state, o
+
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (q, k, v, w))
+    s_final, o = jax.lax.scan(body, s0, xs)
+    return jnp.moveaxis(o, 0, 2).astype(v.dtype), s_final
+
+
+def gla_chunked_ref(q: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+                    u: Optional[jax.Array] = None, chunk: int = 64,
+                    initial_state: Optional[jax.Array] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked-parallel scan: intra-chunk work is dense matmul (MXU food),
+    inter-chunk carries the (Dk,Dv) state.  Returns (o, final_state)."""
+    B, H, T, Dk = q.shape
+    Dv = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    n = T // chunk
+    f32 = jnp.float32
+
+    qc = q.reshape(B, H, n, chunk, Dk).astype(f32)
+    kc = k.reshape(B, H, n, chunk, Dk).astype(f32)
+    vc = v.reshape(B, H, n, chunk, Dv).astype(f32)
+    wc = w.reshape(B, H, n, chunk, Dk).astype(f32)
+
+    logw = jnp.log(jnp.maximum(wc, 1e-22))
+    cum_incl = jnp.cumsum(logw, axis=-2)              # prod_{i<=t} w_i
+    cum_excl = cum_incl - logw                        # prod_{i<t}  w_i
+    w_total = jnp.exp(cum_incl[..., -1, :])           # (B,H,n,Dk)
+
+    # intra-chunk pairing: bounded by the decay contract (see module doc)
+    k_tilde = kc * jnp.exp(-cum_incl)
+    # cross-chunk flow: exponent cum_last - cum <= 0 — stable for any w
+    k_flow = kc * jnp.exp(cum_incl[..., -1:, :] - cum_incl)
+    if u is None:  # post mode
+        q_tilde = qc * jnp.exp(cum_incl)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    else:          # bonus mode
+        q_tilde = qc * jnp.exp(cum_excl)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    scores = jnp.einsum("bhntk,bhnsk->bhnts", q_tilde, k_tilde)
+    scores = jnp.where(mask, scores, 0.0)
+    o_intra = jnp.einsum("bhnts,bhnsv->bhntv", scores, vc)
+    if u is not None:
+        diag = jnp.einsum("bhntk,hk,bhntk->bhnt", qc, u.astype(f32), kc)
+        o_intra = o_intra + diag[..., None] * vc
+
+    ks_v = jnp.einsum("bhnsk,bhnsv->bhnkv", k_flow, vc)  # chunk kv summary
+
+    if initial_state is None:
+        s0 = jnp.zeros((B, H, Dk, Dv), f32)
+    else:
+        s0 = initial_state.astype(f32)
+
+    def body(state, xs):
+        q_t, wtot, kv_sum = xs  # (B,H,chunk,Dk), (B,H,Dk), (B,H,Dk,Dv)
+        o_inter = jnp.einsum("bhtk,bhkv->bhtv", q_t, state)
+        state = wtot[..., :, None] * state + kv_sum
+        return state, o_inter
+
+    xs = (jnp.moveaxis(q_tilde, 2, 0), jnp.moveaxis(w_total, 2, 0),
+          jnp.moveaxis(ks_v, 2, 0))
+    s_final, o_inter = jax.lax.scan(body, s0, xs)
+    o = o_intra + jnp.moveaxis(o_inter, 0, 2)
+    return o.reshape(B, H, T, Dv).astype(v.dtype), s_final
+
+
+# ---------------------------------------------------------------------------
+# SSD mode (Mamba2): B/C shared across heads, per-head SCALAR decay.
+#
+# The generic GLA path above broadcasts q/k/w to every head — an H-fold
+# (64x for zamba2) materialization of (B,H,T,N) tensors that made the
+# zamba2 train cell the worst roofline fraction of the sweep (0.09%).
+# The SSD structure avoids it: scores q@k^T are computed ONCE (shared),
+# the per-head decay enters as the (C,C) L-matrix (exp of non-positive
+# cumsum differences — unconditionally stable, so chunks can be large),
+# and all per-head products are 3-operand einsums that never materialize
+# head-broadcast copies.
+# ---------------------------------------------------------------------------
+
+def ssd_step(state: jax.Array, q, k, v, a):
+    """Single-token SSD update. state: (B,H,N,P); q,k: (B,N); v: (B,H,P);
+    a: (B,H) scalar decay."""
+    kv = jnp.einsum("bn,bhp->bhnp", k, v)
+    state = state * a[..., None, None] + kv
+    o = jnp.einsum("bn,bhnp->bhp", q, state)
+    return state, o
+
+
+def ssd_naive(q, k, v, a, initial_state=None):
+    """Token-by-token oracle. q,k: (B,T,N); v: (B,H,T,P); a: (B,H,T)."""
+    B, T, N = q.shape
+    H, P = v.shape[1], v.shape[-1]
+    s0 = (jnp.zeros((B, H, N, P), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def body(state, xs):
+        qt, kt, vt, at = xs
+        state, o = ssd_step(state, qt.astype(jnp.float32),
+                            kt.astype(jnp.float32),
+                            vt.astype(jnp.float32),
+                            at.astype(jnp.float32))
+        return state, o
+
+    xs = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 2, 0), jnp.moveaxis(a, 2, 0))
+    s_final, o = jax.lax.scan(body, s0, xs)
+    return jnp.moveaxis(o, 0, 2).astype(v.dtype), s_final
+
+
+def ssd_chunked_ref(q, k, v, a, chunk: int = 64, initial_state=None):
+    """Chunked SSD scan. q,k: (B,T,N); v: (B,H,T,P); a: (B,H,T) in (0,1].
+    Returns (o (B,H,T,P), final_state (B,H,N,P))."""
+    B, T, N = q.shape
+    H, P = v.shape[1], v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    n = T // chunk
+    f32 = jnp.float32
+
+    qc = q.reshape(B, n, chunk, N).astype(f32)
+    kc = k.reshape(B, n, chunk, N).astype(f32)
+    vc = v.reshape(B, H, n, chunk, P).astype(f32)
+    ac = a.reshape(B, H, n, chunk).astype(f32)
+
+    loga = jnp.log(jnp.maximum(ac, 1e-37))
+    cum = jnp.cumsum(loga, axis=-1)                       # (B,H,n,C)
+    a_total = jnp.exp(cum[..., -1])                       # (B,H,n)
+
+    # shared scores, computed once for all heads
+    scores = jnp.einsum("bntk,bnsk->bnts", qc, kc)        # (B,n,C,C)
+    # per-head decay L-matrix: exp of NON-POSITIVE differences (stable)
+    diff = cum[..., :, None] - cum[..., None, :]          # (B,H,n,C,C)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask, jnp.exp(jnp.minimum(diff, 0.0)), 0.0)
+    o_intra = jnp.einsum("bnts,bhnts,bhnsp->bhntp", scores, L, vc)
+
+    # chunk kv summary with end-of-chunk decay (exponent <= 0)
+    flow = jnp.exp(cum[..., -1:] - cum)                   # (B,H,n,C)
+    kv_sum = jnp.einsum("bnsk,bhns,bhnsp->bhnkp", kc, flow, vc)
+
+    if initial_state is None:
+        s0 = jnp.zeros((B, H, N, P), f32)
+    else:
+        s0 = initial_state.astype(f32)
+
+    q_in = jnp.exp(cum)                                   # (B,H,n,C)
+
+    def body(state, xs):
+        q_t, qin, atot, kvs = xs
+        o_inter = jnp.einsum("btk,bht,bhkp->bhtp", q_t, qin, state)
+        state = atot[..., None, None] * state + kvs
+        return state, o_inter
+
+    xs = (jnp.moveaxis(qc, 1, 0), jnp.moveaxis(q_in, 2, 0),
+          jnp.moveaxis(a_total, 2, 0), jnp.moveaxis(kv_sum, 2, 0))
+    s_final, o_inter = jax.lax.scan(body, s0, xs)
+    o = o_intra + jnp.moveaxis(o_inter, 0, 2)
+    return o.reshape(B, H, T, P).astype(v.dtype), s_final

@@ -1,0 +1,262 @@
+"""Cell construction: one (architecture × input-shape × mesh) dry-run /
+launch unit, with its sharding policy.
+
+The policy encodes the real TP/DP decisions a production launcher makes,
+all derived from divisibility against the fixed production mesh
+(data=16|32, model=16):
+
+  * heads/kv_heads shard over "model" only when divisible by TP=16;
+    otherwise attention falls back to sequence-sharded q (train/prefill)
+    or sequence-sharded KV cache (decode) — full-rank alternatives that
+    keep per-chip attention work 1/16 without padding the architecture.
+  * train params use FSDP (embed dim over the DP axes) + TP; serving
+    params use pure TP (+ expert sharding over DP×TP for the MoE giants,
+    whose expert tensors dominate).
+  * decode caches shard batch over DP when divisible (decode_32k), else
+    the cache's seq dim over DP (long_500k, batch=1).
+  * sequence parallelism (residual seq over "model") is ON for train
+    cells: the lax.scan layer carry is the dominant live activation and
+    SP cuts it 16x.
+  * MoE giants (arctic/deepseek) train with bf16 params+moments —
+    recorded in EXPERIMENTS.md §Dry-run (the fp32 variants exceed v5e
+    HBM at 256 chips).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import (ModelConfig, ParallelConfig, ShapeConfig,
+                          SHAPE_BY_NAME, TrainConfig)
+from repro.configs import get_config
+from repro.distributed.sharding import ShardingRules, logical_to_spec
+from repro.models.model import Model, build_model
+
+TP = 16  # the "model" axis extent of the production mesh
+
+
+def _div(a: int, b: int) -> bool:
+    return a % b == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    pcfg: ParallelConfig
+    rules: ShardingRules
+    multi_pod: bool
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}/{self.shape.name}"
+
+    def model(self) -> Model:
+        return build_model(self.cfg, self.pcfg, self.rules)
+
+
+# ---------------------------------------------------------------------------
+# Per-cell parallel policy
+# ---------------------------------------------------------------------------
+
+BF16_TRAIN_ARCHS = ("arctic-480b", "deepseek-v3-671b")  # HBM-bound giants
+
+
+def cell_parallel_config(cfg: ModelConfig, shape: ShapeConfig,
+                         overrides: Optional[Dict[str, Any]] = None
+                         ) -> Tuple[ModelConfig, ParallelConfig]:
+    kw: Dict[str, Any] = {}
+    if shape.kind == "train":
+        kw.update(fsdp=True, sequence_parallel=True, remat_policy="nothing",
+                  attention_impl="chunked")
+        # per-chip activation footprint scales with B/microbatch: the MoE
+        # giants need grad accumulation to fit expert dispatch buffers
+        if cfg.num_experts:
+            kw.update(microbatch=8)
+        elif cfg.param_count() > 20e9 or cfg.family in ("hybrid",):
+            kw.update(microbatch=2)
+        if cfg.name in BF16_TRAIN_ARCHS:
+            kw.update(adam_moment_dtype=jnp.bfloat16,
+                      grad_accum_dtype=jnp.bfloat16)
+            cfg = dataclasses.replace(cfg, param_dtype=jnp.bfloat16)
+    else:
+        kw.update(fsdp=False, sequence_parallel=False)
+        # serving checkpoints are bf16 (halves weight HBM + collective)
+        cfg = dataclasses.replace(cfg, param_dtype=jnp.bfloat16)
+        if shape.kind == "prefill":
+            kw.update(attention_impl="chunked")
+    if shape.name == "long_500k":
+        kw.update(shard_kv_seq=True)
+    kw.update(overrides or {})
+    return cfg, ParallelConfig(**kw)
+
+
+def cell_rules(cfg: ModelConfig, shape: ShapeConfig, pcfg: ParallelConfig,
+               *, multi_pod: bool) -> ShardingRules:
+    dp: Any = ("pod", "data") if multi_pod else "data"
+    dp_size = 32 if multi_pod else 16
+    train = shape.kind == "train"
+
+    heads_ok = _div(cfg.num_heads, TP) and cfg.attention in ("gqa", "mla")
+    kv_ok = _div(cfg.num_kv_heads, TP) and cfg.attention == "gqa"
+    if cfg.attention == "mla":
+        kv_ok = False  # latent cache has no head dim; see kv_seq below
+    vocab_ok = _div(cfg.padded_vocab, TP)  # always true by construction
+    batch_ok = _div(shape.global_batch, dp_size)
+
+    # decode-cache seq placement: model axis when heads can't claim it,
+    # DP axes for the long-context cell (batch=1 frees them)
+    kv_seq: Any = None
+    if shape.kind == "decode":
+        if pcfg.shard_kv_seq and _div(shape.seq_len, dp_size):
+            kv_seq = dp if not batch_ok else "model"
+        elif not kv_ok and _div(shape.seq_len, TP):
+            kv_seq = "model"
+
+    # attention q-seq sharding replaces head-TP when heads don't divide
+    attn_seq = None
+    if not heads_ok and shape.kind in ("train", "prefill") \
+            and cfg.attention in ("gqa", "mla") and _div(shape.seq_len, TP):
+        attn_seq = "model"
+
+    # weight placement: train = FSDP (embed over DP) + TP; serving = pure
+    # TP for archs whose TP-sharded weights fit HBM, ZeRO-style weight
+    # sharding (embed over DP too, gathered per layer) for the giants.
+    # Expert tensors stay EP over "model" — moving them to the DP axes
+    # was tried and REFUTED (collective term unchanged: the dominant cost
+    # was the global-sort dispatch, fixed in models/moe.py instead).
+    # serving always shards the weights' embed dim over the DP axes too:
+    # archs whose heads/kv don't divide TP would otherwise replicate
+    # their attention weights 16x (measured: 24 GiB/chip fp32 on yi
+    # decode); the contraction-dim sharding turns into small activation
+    # all-reduces at decode shapes, not weight gathers
+    embed: Any = None
+    if train and pcfg.fsdp:
+        embed = dp
+    elif not train:
+        embed = dp
+
+    r = [
+        ("batch", dp if batch_ok else None),
+        ("vocab", "model" if vocab_ok else None),
+        ("heads", "model" if heads_ok else None),
+        ("kv_heads", "model" if kv_ok else None),
+        ("ff", "model"),
+        # experts: EP over DP x TP over "model" -> fully resident weights
+        # (104 MB/layer/chip on arctic).  FSDP'd experts re-gather per
+        # microbatch (measured 1.2+ TB/chip/step); EP moves ~0.3 GB of
+        # dispatch activations per layer instead (all-to-all over data).
+        ("experts", dp),
+        ("expert_embed", None),
+        ("expert_ff", "model"),
+        ("embed", embed),
+        ("embed_act", None),
+        ("seq", "model" if pcfg.sequence_parallel else None),
+        ("attn_seq", attn_seq),
+        ("logits_seq", None),
+        ("kv_seq", kv_seq),
+        ("head_dim", None),
+        ("state", None),
+        ("layers", None),
+        ("fold", None),
+        ("qk_lora", None),
+        ("inner", "model"),
+        ("rows", dp),
+    ]
+    return ShardingRules(rules=tuple(r))
+
+
+def make_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+              overrides: Optional[Dict[str, Any]] = None) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPE_BY_NAME[shape_name]
+    cfg, pcfg = cell_parallel_config(cfg, shape, overrides)
+    rules = cell_rules(cfg, shape, pcfg, multi_pod=multi_pod)
+    return Cell(arch=arch, shape=shape, cfg=cfg, pcfg=pcfg, rules=rules,
+                multi_pod=multi_pod)
+
+
+# ---------------------------------------------------------------------------
+# Shardings for the cell's inputs
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(cell: Cell) -> Dict[str, P]:
+    """PartitionSpecs mirroring Model.input_specs for train/prefill."""
+    rules = cell.rules
+    tok = logical_to_spec(("batch", None), rules)
+    act3 = logical_to_spec(("batch", None, None), rules)
+    specs = {"tokens": tok, "labels": tok,
+             "patch_embeds": act3, "frames": act3}
+    return specs
+
+
+_CACHE_AXES = {
+    # leaf name -> logical axes for (layers, batch, ...) cache leaves
+    "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "c_kv": ("layers", "batch", "kv_seq", None),
+    "k_rope": ("layers", "batch", "kv_seq", None),
+    "ssm": ("layers", "batch", "inner", None, None),
+    "conv": ("layers", "batch", None, "inner"),
+    "s": ("layers", "batch", None, None, None),
+    "x_prev": ("layers", "batch", None, None),
+}
+
+
+def cache_pspecs(cell: Cell, cache_shapes) -> Any:
+    """PartitionSpec tree mirroring init_cache's structure.  Leaf rules
+    are keyed by leaf name; whisper's cross-KV (T_src=1500, indivisible)
+    stays replicated along seq."""
+    rules = cell.rules
+
+    def leaf_spec(path, leaf):
+        name = None
+        in_cross = False
+        for pp in path:
+            k = getattr(pp, "key", None)
+            if k == "cross":
+                in_cross = True
+            if k in _CACHE_AXES:
+                name = k
+        axes = list(_CACHE_AXES[name])
+        if in_cross:
+            axes = [a if a != "kv_seq" else None for a in axes]
+        # mamba ssm head dim shards over model only when divisible
+        if name == "ssm" and leaf.shape[2] % TP != 0:
+            axes[2] = None
+        spec = logical_to_spec(tuple(axes)[: len(leaf.shape)], rules)
+        return spec
+
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    specs = [leaf_spec(p, l) for p, l in paths_leaves]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named(mesh: Mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def cell_input_shardings(cell: Cell, mesh: Mesh):
+    """(example_args, in_shardings) for the cell's entry point."""
+    model = cell.model()
+    specs = model.input_specs(cell.shape)
+    if cell.shape.kind in ("train", "prefill"):
+        ps = batch_pspecs(cell)
+        shard = {k: NamedSharding(mesh, ps[k]) for k in specs}
+        return specs, shard
+    # decode: {"tokens", "cache", "pos"}
+    tok_spec = logical_to_spec(("batch", None), cell.rules)
+    cache_sp = cache_pspecs(cell, specs["cache"])
+    shard = {
+        "tokens": NamedSharding(mesh, tok_spec),
+        "cache": named(mesh, cache_sp),
+        "pos": NamedSharding(mesh, P()),
+    }
+    return specs, shard

@@ -1,0 +1,103 @@
+"""Batched serving driver (the NEXUS deployment path).
+
+A minimal continuous-batching decode service: requests join a wave, the
+wave prefills once, then decodes lock-step with per-slot stop handling.
+On the production mesh this is the program the decode_* dry-run cells
+lower; on the host mesh it runs for real (examples/serve_demo.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ParallelConfig
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: jax.Array          # (S,) int32
+    max_new_tokens: int = 16
+    temperature: float = 0.0   # 0 => greedy
+
+
+@dataclasses.dataclass
+class Completion:
+    tokens: List[int]
+    latency_s: float
+
+
+class BatchServer:
+    """Wave-batched decoder.  Pads a wave of requests to a common prompt
+    length, prefills, then decodes; slots that hit max_new_tokens stop
+    contributing (their outputs are dropped on the way out)."""
+
+    def __init__(self, model: Model, params, *, max_seq: int = 512,
+                 key: Optional[jax.Array] = None):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step, donate_argnums=(2,))
+
+    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
+        if temperature <= 0:
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        self.key, k = jax.random.split(self.key)
+        return jax.random.categorical(
+            k, logits[:, -1] / temperature).astype(jnp.int32)
+
+    def serve_wave(self, requests: List[Request],
+                   extras: Optional[Dict[str, Any]] = None
+                   ) -> List[Completion]:
+        t0 = time.time()
+        B = len(requests)
+        S = max(int(r.prompt.shape[0]) for r in requests)
+        toks = jnp.stack([
+            jnp.pad(r.prompt, (S - r.prompt.shape[0], 0))  # left-pad
+            for r in requests]).astype(jnp.int32)
+        batch = {"tokens": toks, **(extras or {})}
+
+        # prefill against a cache sized for prompt + generation budget
+        budget = S + max(r.max_new_tokens for r in requests)
+        budget = min(budget, self.max_seq)
+        logits, wave_cache = self._prefill(self.params, batch)
+        cache = self.model.init_cache(B, budget)
+        cache = _splice_prefill(cache, wave_cache, S)
+
+        temp = requests[0].temperature
+        out_tokens: List[List[int]] = [[] for _ in range(B)]
+        nxt = self._sample(logits, temp)
+        for i in range(B):
+            out_tokens[i].append(int(nxt[i]))
+        steps = max(r.max_new_tokens for r in requests) - 1
+        for s in range(steps):
+            pos = jnp.int32(S + s)
+            logits, cache = self._decode(self.params, nxt[:, None], cache,
+                                         pos)
+            nxt = self._sample(logits, temp)
+            for i in range(B):
+                if len(out_tokens[i]) < requests[i].max_new_tokens:
+                    out_tokens[i].append(int(nxt[i]))
+        dt = time.time() - t0
+        return [Completion(tokens=t, latency_s=dt) for t in out_tokens]
+
+
+def _splice_prefill(full_cache, wave_cache, s: int):
+    """Copy the prefill cache (seq length s) into the front of the
+    generation-budget cache.  Recurrent states (ssm/rwkv) copy whole."""
+    def splice(dst, src):
+        if dst.shape == src.shape:
+            return src
+        # KV-style caches differ on the seq axis; find it and splice
+        for ax in range(dst.ndim):
+            if dst.shape[ax] != src.shape[ax]:
+                return jax.lax.dynamic_update_slice_in_dim(
+                    dst, src.astype(dst.dtype), 0, axis=ax)
+        return src
+    return jax.tree_util.tree_map(splice, full_cache, wave_cache)

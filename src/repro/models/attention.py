@@ -1,0 +1,450 @@
+"""Attention: GQA (train / prefill / decode+KV-cache) and MLA (DeepSeek).
+
+The dense reference path is pure jnp (used on CPU and as the oracle);
+when ``ParallelConfig.use_flash_attention`` is on, the train/prefill path
+routes through the Pallas flash-attention kernel in repro.kernels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import ParamDef, constrain
+from repro.models.layers import apply_rope, rope_frequencies
+
+
+# ---------------------------------------------------------------------------
+# Schemas
+# ---------------------------------------------------------------------------
+
+def gqa_schema(cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": ParamDef((d, h, hd), ("embed", "heads", "head_dim"), init="scaled"),
+        "wk": ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "wv": ParamDef((d, kv, hd), ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "wo": ParamDef((h, hd, d), ("heads", "head_dim", "embed"), init="scaled"),
+    }
+
+
+def mla_schema(cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    sch: Dict[str, Any] = {
+        "wkv_a": ParamDef((d, kvr + dr), ("embed", "qk_lora"), init="scaled"),
+        "kv_norm": ParamDef((kvr,), (None,), init="ones"),
+        "wk_b": ParamDef((kvr, h, dn), ("qk_lora", "heads", "head_dim"), init="scaled"),
+        "wv_b": ParamDef((kvr, h, dv), ("qk_lora", "heads", "head_dim"), init="scaled"),
+        "wo": ParamDef((h, dv, d), ("heads", "head_dim", "embed"), init="scaled"),
+    }
+    if qr:
+        sch["wq_a"] = ParamDef((d, qr), ("embed", "qk_lora"), init="scaled")
+        sch["q_norm"] = ParamDef((qr,), (None,), init="ones")
+        sch["wq_b"] = ParamDef((qr, h, dn + dr), ("qk_lora", "heads", "head_dim"),
+                               init="scaled")
+    else:
+        sch["wq"] = ParamDef((d, h, dn + dr), ("embed", "heads", "head_dim"),
+                             init="scaled")
+    return sch
+
+
+def attention_schema(cfg: ModelConfig):
+    return mla_schema(cfg) if cfg.attention == "mla" else gqa_schema(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Dense reference attention core (GQA-aware)
+# ---------------------------------------------------------------------------
+#
+# KV heads are broadcast by an explicit repeat (not the (KV, G) grouped
+# reshape): a reshaped head dim defeats GSPMD's sharding propagation —
+# it moved all 16 model-shards onto the (kv, g) factor pair and
+# REPLICATED the batch dim of the (B,H,S,S) score tensor (measured:
+# 32 GiB/device for granite train_4k).  With the repeat layout + the
+# explicit constraint below, scores shard (batch->data, heads->model).
+
+def _repeat_kv(x: jax.Array, heads: int) -> jax.Array:
+    kv = x.shape[2]
+    return x if kv == heads else jnp.repeat(x, heads // kv, axis=2)
+
+
+def _sdpa_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 kv_mask: Optional[jax.Array], softcap: float,
+                 rules) -> jax.Array:
+    """Single-query attention with GROUPED heads: q (B,1,H,D) reshaped to
+    (B,1,KV,G,D) so the (huge) KV cache is never materialized at H heads
+    — _repeat_kv on the decode path copied the 32k cache 7x for yi
+    (measured +33 GiB/step traffic).  q is tiny, so reshaping q instead
+    is free; GSPMD propagation is safe here because the reshaped tensor
+    is the small one."""
+    B, Sq, H, Dq = q.shape
+    KV, Dv = k.shape[2], v.shape[-1]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, Dq)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dq, jnp.float32))
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    if kv_mask is not None:
+        scores = jnp.where(kv_mask[:, None, None, None, :], scores, -1e30)
+    scores = constrain(scores, ("batch", "kv_heads", None, None, "kv_seq"),
+                       rules)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def _sdpa(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+          q_offset: int = 0, kv_mask: Optional[jax.Array] = None,
+          softcap: float = 0.0, rules=None) -> jax.Array:
+    """q: (B,Sq,H,Dq) k/v: (B,Sk,KV,D*). Returns (B,Sq,H,Dv)."""
+    B, Sq, H, Dq = q.shape
+    if Sq == 1 and not causal and H != k.shape[2]:
+        return _sdpa_decode(q, k, v, kv_mask=kv_mask, softcap=softcap,
+                            rules=rules)
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    Sk = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dq, jnp.float32))
+    # bf16 inputs with fp32 ACCUMULATION (MXU-native) — casting the
+    # operands instead would materialize an fp32 copy of the whole KV
+    # cache on the decode path (measured: +6 GiB/chip on yi decode_32k)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    if causal:
+        qi = jnp.arange(Sq) + q_offset
+        ki = jnp.arange(Sk)
+        mask = qi[:, None] >= ki[None, :]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    if kv_mask is not None:  # (B, Sk) valid positions
+        scores = jnp.where(kv_mask[:, None, None, :], scores, -1e30)
+    scores = constrain(scores, ("batch", "heads", "attn_seq", "kv_seq"),
+                       rules)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def _chunked_attn(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+                  softcap: float = 0.0, rules=None, chunk: int = 1024
+                  ) -> jax.Array:
+    """Online-softmax attention scanned over key blocks with a
+    flash-style custom VJP — the pure-XLA translation of the flash
+    kernel's schedule, including its backward (per-block score
+    RECOMPUTATION instead of saving (n_blocks, B, H, Sq, chunk) probs,
+    which measured 34 GiB/device on granite train_4k).  Residuals are
+    O(B·H·Sq·D): q, k, v, out and the logsumexp rows.  FLOPs ~1.3x a
+    saved-probs backward; peak attention memory drops by Sk/chunk.
+
+    softcap is not supported here (falls back to dense) — only whisper
+    uses it and only at tiny seq lengths."""
+    B, Sq, H, Dq = q.shape
+    Sk = k.shape[1]
+    if Sk % chunk != 0 or Sq == 1 or softcap:
+        return _sdpa(q, k, v, causal=causal, softcap=softcap, rules=rules)
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    out = _flash_xla(q.astype(jnp.float32), k.astype(jnp.float32),
+                     v.astype(jnp.float32), causal, chunk, rules)
+    return out.astype(q.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_xla(q, k, v, causal, chunk, rules):
+    out, _ = _flash_xla_fwd(q, k, v, causal, chunk, rules)
+    return out
+
+
+def _blocks(x, chunk):  # (B,S,H,D) -> (n,B,chunk,H,D)
+    B, S, H, D = x.shape
+    return jnp.moveaxis(x.reshape(B, S // chunk, chunk, H, D), 1, 0)
+
+
+def _flash_xla_fwd(q, k, v, causal, chunk, rules):
+    B, Sq, H, Dq = q.shape
+    Dv = v.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dq, jnp.float32))
+    qt = q.transpose(0, 2, 1, 3)                           # (B,H,Sq,D)
+    qi = jnp.arange(Sq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, start = xs
+        s = jnp.einsum("bhqd,bkhd->bhqk", qt, kblk) * scale
+        if causal:
+            ki = start + jnp.arange(chunk)
+            s = jnp.where((qi[:, None] >= ki[None, :])[None, None], s, -1e30)
+        s = constrain(s, ("batch", "heads", "attn_seq", None), rules)
+        m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhqk,bkhd->bhqd", p, vblk)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, Sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq, 1), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, Dv), jnp.float32)
+    starts = jnp.arange(k.shape[1] // chunk) * chunk
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (_blocks(k, chunk), _blocks(v, chunk), starts))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))               # (B,H,Sq,1)
+    out = (acc / jnp.maximum(l, 1e-30)).transpose(0, 2, 1, 3)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_xla_bwd(causal, chunk, rules, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, Dq = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dq, jnp.float32))
+    qt = q.transpose(0, 2, 1, 3)
+    ot = out.transpose(0, 2, 1, 3).astype(jnp.float32)
+    dot = dout.transpose(0, 2, 1, 3).astype(jnp.float32)
+    delta = jnp.sum(ot * dot, axis=-1, keepdims=True)     # (B,H,Sq,1)
+    qi = jnp.arange(Sq)
+
+    def body(dq_acc, xs):
+        kblk, vblk, start = xs
+        s = jnp.einsum("bhqd,bkhd->bhqk", qt, kblk) * scale
+        if causal:
+            ki = start + jnp.arange(chunk)
+            s = jnp.where((qi[:, None] >= ki[None, :])[None, None], s, -1e30)
+        s = constrain(s, ("batch", "heads", "attn_seq", None), rules)
+        p = jnp.exp(s - lse)                               # recomputed probs
+        dv = jnp.einsum("bhqk,bhqd->bkhd", p, dot)
+        dp = jnp.einsum("bhqd,bkhd->bhqk", dot, vblk)
+        ds = p * (dp - delta) * scale
+        dk = jnp.einsum("bhqk,bhqd->bkhd", ds, qt)
+        dq_acc = dq_acc + jnp.einsum("bhqk,bkhd->bhqd", ds, kblk)
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((B, H, Sq, Dq), jnp.float32)
+    starts = jnp.arange(k.shape[1] // chunk) * chunk
+    dq, (dks, dvs) = jax.lax.scan(
+        body, dq0, (_blocks(k, chunk), _blocks(v, chunk), starts))
+    merge = lambda b, like: jnp.moveaxis(b, 0, 1).reshape(like.shape)
+    return dq.transpose(0, 2, 1, 3), merge(dks, k), merge(dvs, v)
+
+
+_flash_xla.defvjp(_flash_xla_fwd, _flash_xla_bwd)
+
+
+def _maybe_flash(cfg: ModelConfig, parallel, q, k, v, *, causal,
+                 rules=None) -> jax.Array:
+    if parallel is not None and getattr(parallel, "use_flash_attention", False):
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=causal,
+                                      softcap=cfg.logits_softcap)
+    if parallel is not None and \
+            getattr(parallel, "attention_impl", "dense") == "chunked":
+        return _chunked_attn(q, k, v, causal=causal,
+                             softcap=cfg.logits_softcap, rules=rules,
+                             chunk=getattr(parallel, "attention_chunk", 1024))
+    return _sdpa(q, k, v, causal=causal, softcap=cfg.logits_softcap,
+                 rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# GQA forward paths
+# ---------------------------------------------------------------------------
+
+def gqa_project_qkv(params, cfg: ModelConfig, x: jax.Array,
+                    positions: jax.Array, rules=None):
+    ct = cfg.compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(ct))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(ct))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(ct))
+    if cfg.use_rope:
+        interleaved = cfg.rope_fraction < 1.0 and cfg.name.startswith("chatglm")
+        sin, cos = rope_frequencies(cfg, positions)
+        q = apply_rope(q, sin, cos, interleaved)
+        k = apply_rope(k, sin, cos, interleaved)
+    q = constrain(q, ("batch", "attn_seq", "heads", "head_dim"), rules)
+    k = constrain(k, ("batch", None, "kv_heads", "head_dim"), rules)
+    v = constrain(v, ("batch", None, "kv_heads", "head_dim"), rules)
+    return q, k, v
+
+
+def gqa_train(params, cfg: ModelConfig, x: jax.Array, rules=None,
+              parallel=None, causal: bool = True) -> jax.Array:
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = gqa_project_qkv(params, cfg, x, positions, rules)
+    out = _maybe_flash(cfg, parallel, q, k, v, causal=causal, rules=rules)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cfg.compute_dtype))
+    return constrain(out, ("batch", "seq", "embed_act"), rules)
+
+
+def gqa_prefill(params, cfg: ModelConfig, x: jax.Array, rules=None,
+                parallel=None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q, k, v = gqa_project_qkv(params, cfg, x, positions, rules)
+    out = _maybe_flash(cfg, parallel, q, k, v, causal=True, rules=rules)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cfg.compute_dtype))
+    cache = {"k": k, "v": v}
+    return constrain(out, ("batch", "seq", "embed_act"), rules), cache
+
+
+def gqa_decode(params, cfg: ModelConfig, x: jax.Array, cache: Dict[str, jax.Array],
+               pos: jax.Array, rules=None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x: (B,1,d); cache k/v: (B,S,KV,hd); pos: scalar."""
+    ct = cfg.compute_dtype
+    positions = jnp.broadcast_to(pos[None, None], (x.shape[0], 1))
+    q, k_new, v_new = gqa_project_qkv(params, cfg, x, positions, rules)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis=1)
+    k = constrain(k, ("batch", "kv_seq", "kv_heads", "head_dim"), rules)
+    v = constrain(v, ("batch", "kv_seq", "kv_heads", "head_dim"), rules)
+    kv_mask = (jnp.arange(k.shape[1]) <= pos)[None, :]
+    kv_mask = jnp.broadcast_to(kv_mask, (x.shape[0], k.shape[1]))
+    out = _sdpa(q, k, v, causal=False, kv_mask=kv_mask,
+                softcap=cfg.logits_softcap, rules=rules)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(ct))
+    return constrain(out, ("batch", "seq", "embed_act"), rules), {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA forward paths (DeepSeek-V3): expanded for train/prefill,
+# weight-absorbed latent attention for decode (the MLA cache win).
+# ---------------------------------------------------------------------------
+
+def _mla_q(params, cfg: ModelConfig, x: jax.Array, positions):
+    ct = cfg.compute_dtype
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        ql = jnp.einsum("bsd,dr->bsr", x, params["wq_a"].astype(ct))
+        ql = _rms(ql, params["q_norm"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", ql, params["wq_b"].astype(ct))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(ct))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    sin, cos = rope_frequencies(cfg, positions, head_dim=dr)
+    q_rope = apply_rope(q_rope, sin, cos)
+    return q_nope, q_rope
+
+
+def _rms(x, scale, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(jnp.square(x), -1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def _mla_latent(params, cfg: ModelConfig, x: jax.Array, positions):
+    """Compressed per-token latent: c_kv (B,S,kvr) + k_rope (B,S,dr)."""
+    ct = cfg.compute_dtype
+    kvr, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(ct))
+    c_kv, k_rope = kv[..., :kvr], kv[..., kvr:]
+    c_kv = _rms(c_kv, params["kv_norm"], cfg.norm_eps)
+    sin, cos = rope_frequencies(cfg, positions, head_dim=dr)
+    k_rope = apply_rope(k_rope[..., None, :], sin, cos)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_train(params, cfg: ModelConfig, x: jax.Array, rules=None,
+              parallel=None, return_cache: bool = False):
+    ct = cfg.compute_dtype
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)
+    c_kv, k_rope = _mla_latent(params, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wk_b"].astype(ct))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["wv_b"].astype(ct))
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, S, cfg.num_heads, cfg.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    q = constrain(q, ("batch", "attn_seq", "heads", "head_dim"), rules)
+    k = constrain(k, ("batch", None, "heads", "head_dim"), rules)
+    out = _maybe_flash(cfg, parallel, q, k, v, causal=True, rules=rules)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(ct))
+    out = constrain(out, ("batch", "seq", "embed_act"), rules)
+    if return_cache:
+        return out, {"c_kv": c_kv, "k_rope": k_rope}
+    return out
+
+
+def mla_decode(params, cfg: ModelConfig, x: jax.Array, cache, pos,
+               rules=None):
+    """Weight-absorbed decode: attend in the kv_lora latent space; the
+    KV cache holds only (kvr + dr) floats/token — MLA's memory win."""
+    ct = cfg.compute_dtype
+    B = x.shape[0]
+    kvr, dr, dn = cfg.kv_lora_rank, cfg.qk_rope_head_dim, cfg.qk_nope_head_dim
+    positions = jnp.broadcast_to(pos[None, None], (B, 1))
+    q_nope, q_rope = _mla_q(params, cfg, x, positions)  # (B,1,H,dn/dr)
+    c_new, kr_new = _mla_latent(params, cfg, x, positions)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new, pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new, pos, axis=1)
+    c_kv = constrain(c_kv, ("batch", "kv_seq", None), rules)
+    k_rope = constrain(k_rope, ("batch", "kv_seq", None), rules)
+    # absorb wk_b into the query:  q_lat (B,1,H,kvr)
+    q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope, params["wk_b"].astype(ct))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dn + dr, jnp.float32))
+    # bf16 operands + fp32 accumulation: never materialize an fp32 copy
+    # of the latent cache
+    s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat, c_kv,
+                       preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bqhk,bsk->bhqs", q_rope, k_rope,
+                        preferred_element_type=jnp.float32)
+    scores = (s_lat + s_rope) * scale
+    scores = constrain(scores, ("batch", "heads", None, "kv_seq"), rules)
+    S = c_kv.shape[1]
+    mask = (jnp.arange(S) <= pos)[None, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", probs.astype(c_kv.dtype), c_kv,
+                     preferred_element_type=jnp.float32)  # latent ctx
+    # absorbed value up-projection then output projection
+    out = jnp.einsum("bqhr,rhk->bqhk", ctx.astype(ct), params["wv_b"].astype(ct))
+    out = jnp.einsum("bqhk,hkd->bqd", out, params["wo"].astype(ct))
+    return constrain(out, ("batch", "seq", "embed_act"), rules), \
+        {"c_kv": c_kv, "k_rope": k_rope}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn(params, cfg: ModelConfig, x: jax.Array, kv_cache, rules=None):
+    """kv_cache: precomputed {"k","v"} from the encoder output."""
+    ct = cfg.compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(ct))
+    out = _sdpa(q, kv_cache["k"], kv_cache["v"], causal=False)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(ct))
+    return constrain(out, ("batch", "seq", "embed_act"), rules)
+
+
+def cross_kv(params, cfg: ModelConfig, enc_out: jax.Array):
+    ct = cfg.compute_dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"].astype(ct))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"].astype(ct))
+    return {"k": k, "v": v}
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, n_layers: int,
+               dtype=None):
+    """Abstract shapes for one layer-stack's decode cache."""
+    dt = dtype or cfg.compute_dtype
+    if cfg.attention == "mla":
+        return {
+            "c_kv": jnp.zeros((n_layers, batch, seq_len, cfg.kv_lora_rank), dt),
+            "k_rope": jnp.zeros((n_layers, batch, seq_len, cfg.qk_rope_head_dim), dt),
+        }
+    return {
+        "k": jnp.zeros((n_layers, batch, seq_len, cfg.num_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((n_layers, batch, seq_len, cfg.num_kv_heads, cfg.head_dim), dt),
+    }

@@ -1,0 +1,177 @@
+"""Shared layers: norms, embeddings, RoPE, MLPs.
+
+Every layer is a pair of (schema fn, apply fn).  Schemas are ParamDef
+trees (see repro.distributed.sharding); apply fns are pure.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import ParamDef, constrain
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_schema(d: int):
+    return {"scale": ParamDef((d,), (None,), init="ones")}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_schema(d: int):
+    return {"scale": ParamDef((d,), (None,), init="ones"),
+            "bias": ParamDef((d,), (None,), init="zeros")}
+
+
+def layernorm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dtype)
+
+
+def make_norm(cfg: ModelConfig):
+    if cfg.family == "audio":
+        return layernorm_schema, lambda p, x: layernorm(p, x, cfg.norm_eps)
+    return rmsnorm_schema, lambda p, x: rmsnorm(p, x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def embedding_schema(cfg: ModelConfig):
+    sch = {"embedding": ParamDef((cfg.padded_vocab, cfg.d_model),
+                                 ("vocab", "embed"), init="embed")}
+    if not cfg.tie_embeddings:
+        sch["unembed"] = ParamDef((cfg.d_model, cfg.padded_vocab),
+                                  ("embed", "vocab"), init="scaled")
+    if cfg.learned_pos_emb:
+        sch["pos"] = ParamDef((cfg.max_position_embeddings, cfg.d_model),
+                              (None, "embed"), init="embed")
+    return sch
+
+
+def embed_tokens(params, cfg: ModelConfig, tokens: jax.Array, rules=None,
+                 pos_offset: int = 0) -> jax.Array:
+    x = jnp.take(params["embedding"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.learned_pos_emb:
+        pos = params["pos"][pos_offset:pos_offset + tokens.shape[-1]]
+        x = x + pos.astype(cfg.compute_dtype)
+    return constrain(x, ("batch", "seq", "embed_act"), rules)
+
+
+def unembed(params, cfg: ModelConfig, x: jax.Array, rules=None) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embedding"].T
+    else:
+        w = params["unembed"]
+    logits = jnp.einsum("...d,dv->...v", x, w.astype(cfg.compute_dtype))
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    if cfg.padded_vocab != cfg.vocab_size:  # exact CE: pad slots -> -inf
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    # vocab claims "model"; the seq dim of logits stays unsharded so the
+    # (B,S,V) fp32 CE buffer shards over batch x vocab (memory-critical)
+    return constrain(logits, ("batch", "logits_seq", "vocab"), rules)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (full / partial fraction / interleaved GLM-style)
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(cfg: ModelConfig, positions: jax.Array,
+                     head_dim: Optional[int] = None):
+    """Return (sin, cos) of shape positions.shape + (rot_dim/2,)."""
+    hd = head_dim if head_dim is not None else cfg.head_dim
+    rot = int(hd * cfg.rope_fraction)
+    rot -= rot % 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array,
+               interleaved: bool = False) -> jax.Array:
+    """x: (..., heads, head_dim); sin/cos: broadcastable (..., rot/2)."""
+    rot = 2 * sin.shape[-1]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    sin = sin[..., None, :]  # add head axis
+    cos = cos[..., None, :]
+    if interleaved:  # GLM / GPT-J pairing: (x0,x1),(x2,x3),...
+        x1 = x_rot[..., 0::2]
+        x2 = x_rot[..., 1::2]
+        r1 = x1 * cos - x2 * sin
+        r2 = x2 * cos + x1 * sin
+        out = jnp.stack([r1, r2], axis=-1).reshape(x_rot.shape)
+    else:  # NeoX pairing: first half / second half
+        half = rot // 2
+        x1, x2 = x_rot[..., :half], x_rot[..., half:]
+        r1 = x1 * cos - x2 * sin
+        r2 = x2 * cos + x1 * sin
+        out = jnp.concatenate([r1, r2], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1) if rot < x.shape[-1] else out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_schema(cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp == "swiglu":
+        return {
+            "wi_gate": ParamDef((d, ff), ("embed", "ff"), init="scaled"),
+            "wi_up": ParamDef((d, ff), ("embed", "ff"), init="scaled"),
+            "wo": ParamDef((ff, d), ("ff", "embed"), init="scaled"),
+        }
+    return {
+        "wi": ParamDef((d, ff), ("embed", "ff"), init="scaled"),
+        "wo": ParamDef((ff, d), ("ff", "embed"), init="scaled"),
+    }
+
+
+def mlp_apply(params, cfg: ModelConfig, x: jax.Array, rules=None) -> jax.Array:
+    ct = cfg.compute_dtype
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, params["wi_gate"].astype(ct))
+        u = jnp.einsum("...d,df->...f", x, params["wi_up"].astype(ct))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, params["wi"].astype(ct)))
+    h = constrain(h, ("batch", "seq", "ff"), rules)
+    out = jnp.einsum("...f,fd->...d", h, params["wo"].astype(ct))
+    return constrain(out, ("batch", "seq", "embed_act"), rules)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None):
+    """Mean next-token CE.  logits (B,S,V) fp-any, labels (B,S) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()

@@ -1,0 +1,264 @@
+"""Model facade: ``build_model(cfg)`` -> init / loss / prefill / decode.
+
+One class serves all 10 assigned architectures.  Per-family behaviour is
+delegated to :class:`repro.models.transformer.DecoderStack` (dense / moe /
+hybrid / ssm) and :mod:`repro.models.encdec` (whisper).  The vlm / audio
+modality frontends are stubs per the assignment: ``input_specs()`` hands
+the model precomputed patch / frame embeddings.
+
+Shape-cell semantics (matching the assignment):
+  train_*    -> ``loss_fn`` (forward + CE; the launcher adds grad+optim)
+  prefill_*  -> ``prefill``  (full forward, last-token logits + KV cache)
+  decode_*   -> ``decode_step`` (one new token against a seq_len cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ParallelConfig, ShapeConfig
+from repro.distributed.sharding import (ParamDef, abstract_params, constrain,
+                                        init_params, param_shardings,
+                                        param_specs)
+from repro.models import attention as attn
+from repro.models import encdec
+from repro.models.layers import (embedding_schema, embed_tokens, make_norm,
+                                 softmax_cross_entropy, unembed)
+from repro.models.transformer import Blocks, DecoderStack, stack_schema
+
+MTP_WEIGHT = 0.3  # deepseek-v3 MTP aux loss weight (paper uses lambda=0.3)
+
+
+def _num_patches(seq_len: int) -> int:
+    """vlm stub: patch positions spliced at the front of the sequence."""
+    return max(1, min(256, seq_len // 4))
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, parallel: Optional[ParallelConfig] = None,
+                 rules=None):
+        self.cfg = cfg
+        self.parallel = parallel or ParallelConfig()
+        self.rules = rules
+        self.stack = (DecoderStack(cfg, self.parallel, rules)
+                      if not cfg.is_encdec else None)
+        self.norm_schema, self.norm = make_norm(cfg)
+
+    # ------------------------------------------------------------------
+    # Parameters
+    # ------------------------------------------------------------------
+    def schema(self):
+        cfg = self.cfg
+        sch: Dict[str, Any] = {"embed": embedding_schema(cfg)}
+        if cfg.is_encdec:
+            sch["encoder"] = encdec.encoder_schema(cfg)
+            sch["decoder"] = stack_schema(encdec.decoder_layer_schema(cfg),
+                                          cfg.num_layers)
+        else:
+            sch["stack"] = self.stack.schema()
+            if cfg.mtp_depth:
+                b = Blocks(cfg, self.parallel, self.rules)
+                d = cfg.d_model
+                sch["mtp"] = {
+                    "proj": ParamDef((2 * d, d), ("embed", None), init="scaled"),
+                    "ln_h": self.norm_schema(d),
+                    "ln_e": self.norm_schema(d),
+                    "block": b.dense_schema(d_ff=cfg.dense_ff or cfg.d_ff),
+                }
+        sch["ln_f"] = self.norm_schema(cfg.d_model)
+        return sch
+
+    def init(self, key: jax.Array):
+        return init_params(key, self.schema(), self.cfg.param_dtype)
+
+    def abstract_params(self):
+        return abstract_params(self.schema(), self.cfg.param_dtype)
+
+    def param_specs(self, rules, mesh=None):
+        return param_specs(self.schema(), rules, mesh)
+
+    def param_shardings(self, rules, mesh):
+        return param_shardings(self.schema(), rules, mesh)
+
+    # ------------------------------------------------------------------
+    # Embedding helpers
+    # ------------------------------------------------------------------
+    def _embed_in(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], cfg, batch["tokens"], self.rules)
+        if cfg.family == "vlm" and "patch_embeds" in batch:
+            pe = batch["patch_embeds"].astype(cfg.compute_dtype)
+            x = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1)
+            x = constrain(x, ("batch", "seq", "embed_act"), self.rules)
+        return x
+
+    def _logits(self, params, h: jax.Array) -> jax.Array:
+        h = self.norm(params["ln_f"], h)
+        return unembed(params["embed"], self.cfg, h, self.rules)
+
+    # ------------------------------------------------------------------
+    # Training forward / loss
+    # ------------------------------------------------------------------
+    def forward_train(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        """Returns (logits (B,S,V) fp32-softmax-ready, aux_loss scalar)."""
+        cfg = self.cfg
+        if cfg.is_encdec:
+            enc_out = encdec.encode(params["encoder"], cfg, batch["frames"],
+                                    self.rules, self.parallel)
+            x = self._embed_in(params, batch)
+            h = encdec.decoder_train(params["decoder"], cfg, x, enc_out,
+                                     self.rules, self.parallel)
+            return self._logits(params, h), jnp.float32(0.0)
+        x = self._embed_in(params, batch)
+        h, aux = self.stack.train_hidden(params["stack"], x)
+        logits = self._logits(params, h)
+        if cfg.mtp_depth:
+            aux = aux + self._mtp_loss(params, batch, h)
+        return logits, aux
+
+    def _mtp_loss(self, params, batch, h: jax.Array) -> jax.Array:
+        """DeepSeek-V3 multi-token prediction (depth 1): predict t+2 from
+        [norm(h_t); norm(emb(t_{t+1}))] through one extra dense block."""
+        cfg, p = self.cfg, params["mtp"]
+        tokens, labels = batch["tokens"], batch["labels"]
+        e_next = embed_tokens(params["embed"], cfg, tokens[:, 1:], self.rules)
+        h_cur = h[:, :-1]
+        z = jnp.concatenate([self.norm(p["ln_h"], h_cur),
+                             self.norm(p["ln_e"], e_next)], axis=-1)
+        z = jnp.einsum("bsd,de->bse", z, p["proj"].astype(cfg.compute_dtype))
+        b = Blocks(cfg, self.parallel, self.rules)
+        z, _ = b.dense_train(p["block"], z)
+        logits = self._logits(params, z)  # (B, S-1, V)
+        return MTP_WEIGHT * softmax_cross_entropy(logits[:, :-1],
+                                                  labels[:, 2:])
+
+    def loss_fn(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits, aux = self.forward_train(params, batch)
+        ce = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+        loss = ce + aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------------
+    # Features for causal nuisance heads (the Dream11 scenario: pooled
+    # event-sequence representation as the confounder embedding)
+    # ------------------------------------------------------------------
+    def features(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        if cfg.is_encdec:
+            enc_out = encdec.encode(params["encoder"], cfg, batch["frames"],
+                                    self.rules, self.parallel)
+            x = self._embed_in(params, batch)
+            h = encdec.decoder_train(params["decoder"], cfg, x, enc_out,
+                                     self.rules, self.parallel)
+        else:
+            x = self._embed_in(params, batch)
+            h, _ = self.stack.train_hidden(params["stack"], x)
+        h = self.norm(params["ln_f"], h)
+        return h.mean(axis=1).astype(jnp.float32)
+
+    # ------------------------------------------------------------------
+    # Serving: prefill + decode
+    # ------------------------------------------------------------------
+    def prefill(self, params, batch) -> Tuple[jax.Array, Any]:
+        """Full forward over the prompt; returns (last-token logits, cache)."""
+        cfg = self.cfg
+        if cfg.is_encdec:
+            enc_out = encdec.encode(params["encoder"], cfg, batch["frames"],
+                                    self.rules, self.parallel)
+            cross = encdec.encoder_cross_kv(params["decoder"], cfg, enc_out)
+            x = self._embed_in(params, batch)
+            h, self_caches = encdec.decoder_prefill(
+                params["decoder"], cfg, x, cross, self.rules, self.parallel)
+            cache = {"self": self_caches, "cross": cross}
+        else:
+            x = self._embed_in(params, batch)
+            h, cache = self.stack.prefill_hidden(params["stack"], x)
+        logits = self._logits(params, h[:, -1:])
+        return logits, cache
+
+    def decode_step(self, params, tokens: jax.Array, cache, pos: jax.Array
+                    ) -> Tuple[jax.Array, Any]:
+        """One new token. tokens: (B,1) int32; pos: () int32 — the index
+        the new token is written at (cache holds positions < pos)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["embedding"], tokens,
+                     axis=0).astype(cfg.compute_dtype)
+        if cfg.learned_pos_emb:
+            pe = jax.lax.dynamic_slice_in_dim(params["embed"]["pos"], pos, 1)
+            x = x + pe.astype(cfg.compute_dtype)[None]
+        x = constrain(x, ("batch", "seq", "embed_act"), self.rules)
+        if cfg.is_encdec:
+            h, new_self = encdec.decoder_decode(
+                params["decoder"], cfg, x, cache["self"], cache["cross"],
+                pos, self.rules)
+            new_cache = {"self": new_self, "cross": cache["cross"]}
+        else:
+            h, new_cache = self.stack.decode_hidden(params["stack"], x,
+                                                    cache, pos)
+        logits = self._logits(params, h)
+        return logits, new_cache
+
+    # alias used by the serving driver / dry-run
+    serve_step = decode_step
+
+    def init_cache(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        if cfg.is_encdec:
+            dt = cfg.compute_dtype
+            kv, hd = cfg.num_kv_heads, cfg.head_dim
+            L, T = cfg.num_layers, cfg.max_source_positions
+            return {
+                "self": {
+                    "k": jnp.zeros((L, batch, seq_len, kv, hd), dt),
+                    "v": jnp.zeros((L, batch, seq_len, kv, hd), dt),
+                },
+                "cross": {
+                    "k": jnp.zeros((L, batch, T, kv, hd), dt),
+                    "v": jnp.zeros((L, batch, T, kv, hd), dt),
+                },
+            }
+        return self.stack.init_cache(batch, seq_len)
+
+    # ------------------------------------------------------------------
+    # Input specs (dry-run: ShapeDtypeStructs, no allocation)
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        tok = lambda *sh: jax.ShapeDtypeStruct(sh, i32)
+        act = lambda *sh: jax.ShapeDtypeStruct(sh, cfg.compute_dtype)
+
+        def extras() -> Dict[str, Any]:
+            ex: Dict[str, Any] = {}
+            if cfg.family == "vlm":
+                ex["patch_embeds"] = act(B, _num_patches(S), cfg.d_model)
+            if cfg.is_encdec:
+                ex["frames"] = act(B, cfg.max_source_positions, cfg.d_model)
+            return ex
+
+        if shape.kind == "train":
+            return {"tokens": tok(B, S), "labels": tok(B, S), **extras()}
+        if shape.kind == "prefill":
+            return {"tokens": tok(B, S), **extras()}
+        if shape.kind == "decode":
+            cache = jax.eval_shape(lambda: self.init_cache(B, S))
+            return {"tokens": tok(B, 1), "cache": cache,
+                    "pos": jax.ShapeDtypeStruct((), i32)}
+        raise ValueError(shape.kind)
+
+    def supports_shape(self, shape: ShapeConfig) -> Tuple[bool, str]:
+        """Shape-cell applicability (see DESIGN.md §Arch-applicability)."""
+        cfg = self.cfg
+        if shape.name == "long_500k" and not cfg.is_subquadratic:
+            return False, ("full quadratic attention: long_500k requires "
+                           "sub-quadratic sequence mixing (skip per spec)")
+        return True, ""
+
+
+def build_model(cfg: ModelConfig, parallel: Optional[ParallelConfig] = None,
+                rules=None) -> Model:
+    return Model(cfg, parallel, rules)

@@ -1,0 +1,188 @@
+"""RWKV-6 "Finch" block (rwkv6-3b): attention-free time-mix with
+data-dependent per-channel decay + squared-ReLU channel-mix.
+
+The time-mix recurrence runs on the shared chunked GLA kernel in "bonus"
+mode:  o_t = r_t (S_{t-1} + diag(u) k_t v_t^T),  S_t = diag(w_t) S_{t-1}
++ k_t v_t^T, with w_t = exp(-exp(w0 + tanh(x W_a) W_b)) per channel.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import ParamDef, constrain
+from repro.kernels.ssm_scan import ops as scan_ops
+from repro.kernels.ssm_scan.ref import MAX_LOG_DECAY
+
+RWKV_HEADDIM = 64
+DECAY_LORA = 64
+
+
+def _heads(cfg: ModelConfig):
+    h = max(1, cfg.d_model // RWKV_HEADDIM)
+    return h, cfg.d_model // h
+
+
+def time_mix_schema(cfg: ModelConfig):
+    d = cfg.d_model
+    h, hd = _heads(cfg)
+    lora = min(DECAY_LORA, d)
+    return {
+        "mu_r": ParamDef((d,), (None,), init="zeros"),
+        "mu_k": ParamDef((d,), (None,), init="zeros"),
+        "mu_v": ParamDef((d,), (None,), init="zeros"),
+        "mu_g": ParamDef((d,), (None,), init="zeros"),
+        "mu_w": ParamDef((d,), (None,), init="zeros"),
+        "wr": ParamDef((d, d), ("embed", "inner"), init="scaled"),
+        "wk": ParamDef((d, d), ("embed", "inner"), init="scaled"),
+        "wv": ParamDef((d, d), ("embed", "inner"), init="scaled"),
+        "wg": ParamDef((d, d), ("embed", "inner"), init="scaled"),
+        "wo": ParamDef((d, d), ("inner", "embed"), init="scaled"),
+        "w0": ParamDef((d,), (None,), init="ones", scale=1.0),
+        "w_a": ParamDef((d, lora), ("embed", None), init="scaled"),
+        "w_b": ParamDef((lora, d), (None, "inner"), init="scaled", scale=0.1),
+        "u": ParamDef((d,), (None,), init="zeros"),
+        "ln_scale": ParamDef((d,), (None,), init="ones"),
+        "ln_bias": ParamDef((d,), (None,), init="zeros"),
+    }
+
+
+def channel_mix_schema(cfg: ModelConfig):
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": ParamDef((d,), (None,), init="zeros"),
+        "mu_r": ParamDef((d,), (None,), init="zeros"),
+        "wk": ParamDef((d, ff), ("embed", "ff"), init="scaled"),
+        "wv": ParamDef((ff, d), ("ff", "embed"), init="scaled"),
+        "wr": ParamDef((d, d), ("embed", "inner"), init="scaled"),
+    }
+
+
+def _shift(x: jax.Array, last: jax.Array = None):
+    """Token shift: x_{t-1}, zeros (or carried state) at t=0."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)[None, None]
+
+
+def _decay(params, xw: jax.Array) -> jax.Array:
+    """Data-dependent per-channel decay in (0,1).
+
+    The raw rate exp(-(w0+lora)) is clamped to MAX_LOG_DECAY per step —
+    functionally a full reset over a 16-token span — which bounds the
+    chunked kernel's exp(-cumsum) factor (see ssm_scan.ref contract).
+    """
+    f32 = jnp.float32
+    lo = jnp.tanh(xw.astype(f32) @ params["w_a"].astype(f32)) @ params["w_b"].astype(f32)
+    rate = jnp.minimum(jnp.exp(-(params["w0"].astype(f32) + lo)), MAX_LOG_DECAY)
+    return jnp.exp(-rate)
+
+
+def _group_norm(cfg, params, o, B, T):
+    h, hd = _heads(cfg)
+    f32 = jnp.float32
+    o = o.astype(f32)
+    mu = o.mean(-1, keepdims=True)
+    var = ((o - mu) ** 2).mean(-1, keepdims=True)
+    o = (o - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+    o = o.reshape(B, T, h * hd)
+    return o * params["ln_scale"].astype(f32) + params["ln_bias"].astype(f32)
+
+
+def _tm_qkvwg(params, cfg, x, xs):
+    ct = cfg.compute_dtype
+    h, hd = _heads(cfg)
+    B, T, d = x.shape
+    proj = lambda name, mu: _lerp(x, xs, params[mu]) @ params[name].astype(ct)
+    r = proj("wr", "mu_r").reshape(B, T, h, hd)
+    k = proj("wk", "mu_k").reshape(B, T, h, hd)
+    v = proj("wv", "mu_v").reshape(B, T, h, hd)
+    g = proj("wg", "mu_g")
+    w = _decay(params, _lerp(x, xs, params["mu_w"])).reshape(B, T, h, hd)
+    to_bhtd = lambda t: t.transpose(0, 2, 1, 3)
+    u = params["u"].astype(jnp.float32).reshape(h, hd)
+    return (to_bhtd(r), to_bhtd(k), to_bhtd(v), to_bhtd(w.astype(jnp.float32)),
+            u, g)
+
+
+def time_mix_train(params, cfg: ModelConfig, x: jax.Array, rules=None,
+                   chunk: int = 64) -> jax.Array:
+    ct = cfg.compute_dtype
+    B, T, d = x.shape
+    r, k, v, w, u, g = _tm_qkvwg(params, cfg, x, _shift(x))
+    o, _ = scan_ops.gla(r, k, v, w, u, chunk=chunk)
+    o = o.transpose(0, 2, 1, 3)  # (B,T,h,hd)
+    o = _group_norm(cfg, params, o, B, T)
+    o = (o * jax.nn.silu(g.astype(jnp.float32))).astype(ct)
+    out = o @ params["wo"].astype(ct)
+    return constrain(out, ("batch", "seq", "embed_act"), rules)
+
+
+def time_mix_prefill(params, cfg: ModelConfig, x: jax.Array, rules=None,
+                     chunk: int = 64) -> Tuple[jax.Array, Dict]:
+    """time_mix_train + final recurrent state (prefill -> decode handoff)."""
+    ct = cfg.compute_dtype
+    B, T, d = x.shape
+    r, k, v, w, u, g = _tm_qkvwg(params, cfg, x, _shift(x))
+    o, s_final = scan_ops.gla(r, k, v, w, u, chunk=chunk)
+    o = o.transpose(0, 2, 1, 3)
+    o = _group_norm(cfg, params, o, B, T)
+    o = (o * jax.nn.silu(g.astype(jnp.float32))).astype(ct)
+    out = o @ params["wo"].astype(ct)
+    out = constrain(out, ("batch", "seq", "embed_act"), rules)
+    return out, {"s": s_final, "x_prev": x[:, -1:]}
+
+
+def time_mix_decode(params, cfg: ModelConfig, x: jax.Array, state: Dict,
+                    rules=None) -> Tuple[jax.Array, Dict]:
+    """x: (B,1,d); state: {"s": (B,h,hd,hd), "x_prev": (B,1,d)}."""
+    ct = cfg.compute_dtype
+    B = x.shape[0]
+    r, k, v, w, u, g = _tm_qkvwg(params, cfg, x, state["x_prev"])
+    sq = lambda t: t[:, :, 0]
+    new_s, o = scan_ops.gla_decode_step(state["s"], sq(r), sq(k), sq(v), sq(w), u)
+    o = o[:, None]  # (B,h,hd) -> (B,1,h,hd)
+    o = _group_norm(cfg, params, o, B, 1)
+    o = (o * jax.nn.silu(g.astype(jnp.float32))).astype(ct)
+    out = o @ params["wo"].astype(ct)
+    out = constrain(out, ("batch", "seq", "embed_act"), rules)
+    return out, {"s": new_s, "x_prev": x}
+
+
+def channel_mix_train(params, cfg: ModelConfig, x: jax.Array, rules=None,
+                      x_prev: jax.Array = None) -> jax.Array:
+    ct = cfg.compute_dtype
+    xs = _shift(x, x_prev)
+    k = _lerp(x, xs, params["mu_k"]) @ params["wk"].astype(ct)
+    k = jnp.square(jax.nn.relu(k))
+    kv = k @ params["wv"].astype(ct)
+    r = jax.nn.sigmoid(_lerp(x, xs, params["mu_r"]) @ params["wr"].astype(ct))
+    return constrain(r * kv, ("batch", "seq", "embed_act"), rules)
+
+
+def channel_mix_decode(params, cfg: ModelConfig, x: jax.Array, state: Dict,
+                       rules=None) -> Tuple[jax.Array, Dict]:
+    out = channel_mix_train(params, cfg, x, rules, x_prev=state["x_prev"])
+    return out, {"x_prev": x}
+
+
+def channel_mix_prefill(params, cfg: ModelConfig, x: jax.Array, rules=None
+                        ) -> Tuple[jax.Array, Dict]:
+    out = channel_mix_train(params, cfg, x, rules)
+    return out, {"x_prev": x[:, -1:]}
+
+
+def rwkv_init_state(cfg: ModelConfig, batch: int, dtype):
+    h, hd = _heads(cfg)
+    return {
+        "tm": {"s": jnp.zeros((batch, h, hd, hd), jnp.float32),
+               "x_prev": jnp.zeros((batch, 1, cfg.d_model), dtype)},
+        "cm": {"x_prev": jnp.zeros((batch, 1, cfg.d_model), dtype)},
+    }

@@ -1,0 +1,160 @@
+"""Mamba2 (SSD) block — the zamba2 hybrid backbone.
+
+Maps the selective-state-space recurrence onto the shared chunked GLA
+kernel (repro.kernels.ssm_scan):  q=C, k=B, v=dt*x, per-head scalar decay
+a_t = exp(-exp(A_log)*dt_t) broadcast over the state dim ("post" mode).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.distributed.sharding import ParamDef, constrain
+from repro.kernels.ssm_scan import ops as scan_ops
+from repro.kernels.ssm_scan.ref import MAX_LOG_DECAY
+
+MAMBA_HEADDIM = 64
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    heads = max(1, di // MAMBA_HEADDIM)
+    hd = di // heads
+    return di, heads, hd
+
+
+def mamba_schema(cfg: ModelConfig):
+    d, s = cfg.d_model, cfg.ssm_state
+    di, heads, _ = _dims(cfg)
+    proj_out = 2 * di + 2 * s + heads
+    return {
+        "in_proj": ParamDef((d, proj_out), ("embed", "inner"), init="scaled"),
+        "conv_w": ParamDef((cfg.ssm_conv, di), (None, "inner"), init="scaled",
+                           scale=1.0),
+        "conv_b": ParamDef((di,), (None,), init="zeros"),
+        "A_log": ParamDef((heads,), (None,), init="zeros"),
+        "dt_bias": ParamDef((heads,), (None,), init="zeros"),
+        "D": ParamDef((heads,), (None,), init="ones"),
+        "norm": ParamDef((di,), (None,), init="ones"),
+        "out_proj": ParamDef((di, d), ("inner", "embed"), init="scaled"),
+    }
+
+
+def _split_proj(cfg, proj):
+    di, heads, _ = _dims(cfg)
+    s = cfg.ssm_state
+    z, xb, B, C, dt = jnp.split(proj, [di, 2 * di, 2 * di + s, 2 * di + 2 * s],
+                                axis=-1)
+    return z, xb, B, C, dt
+
+
+def _causal_conv(xb, w, b, state=None):
+    """Depthwise causal conv. xb: (B,T,di); w: (K,di). state: (B,K-1,di)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xb.shape[0], K - 1, xb.shape[2]), xb.dtype)
+    else:
+        pad = state.astype(xb.dtype)
+    xp = jnp.concatenate([pad, xb], axis=1)
+    out = sum(xp[:, i:i + xb.shape[1]] * w[i][None, None] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return out + b[None, None], new_state
+
+
+def _ssd_inputs(cfg, params, xb, B, C, dt):
+    """Build SSD operands: q,k (B,T,N) HEAD-SHARED, v (B,H,T,P),
+    a (B,H,T) scalar decay.  Broadcasting B/C/decay to every head (the
+    old GLA mapping) materialized H-fold copies of (B,T,N) — 64x for
+    zamba2 — and made its train cell the sweep's worst roofline fraction;
+    the SSD-structured path keeps them shared (see ssm_scan.ref)."""
+    di, heads, hd = _dims(cfg)
+    Bsz, T, _ = xb.shape
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    # decay-rate bound: rate = exp(A_log)*dt clamped to MAX_LOG_DECAY per
+    # step (a 16-step span then decays by ~1e-24 — a full reset), keeping
+    # the chunked scan's exp factors finite (kernel contract).
+    rate = jnp.minimum(jnp.exp(params["A_log"].astype(jnp.float32)) * dt,
+                       MAX_LOG_DECAY)
+    a = jnp.exp(-rate)  # (B,T,H)
+    v = xb.reshape(Bsz, T, heads, hd) * dt[..., None].astype(xb.dtype)
+    v = v.transpose(0, 2, 1, 3).astype(jnp.float32)      # (B,H,T,P)
+    return (C.astype(jnp.float32), B.astype(jnp.float32), v,
+            a.transpose(0, 2, 1))                        # q,k,(B,H,T)
+
+
+def _gated_out(cfg, params, y, z, rules):
+    di, heads, hd = _dims(cfg)
+    Bsz, T = z.shape[:2]
+    y = y.reshape(Bsz, T, di).astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps) * params["norm"].astype(jnp.float32)
+    out = jnp.einsum("btd,de->bte", y.astype(cfg.compute_dtype),
+                     params["out_proj"].astype(cfg.compute_dtype))
+    return constrain(out, ("batch", "seq", "embed_act"), rules)
+
+
+def mamba_train(params, cfg: ModelConfig, x: jax.Array, rules=None) -> jax.Array:
+    ct = cfg.compute_dtype
+    di, heads, hd = _dims(cfg)
+    proj = jnp.einsum("btd,dp->btp", x, params["in_proj"].astype(ct))
+    z, xb, B, C, dt = _split_proj(cfg, proj)
+    xb, _ = _causal_conv(xb, params["conv_w"].astype(ct), params["conv_b"].astype(ct))
+    xb = jax.nn.silu(xb)
+    q, k, v, a = _ssd_inputs(cfg, params, xb, B, C, dt)
+    o, _ = scan_ops.ssd(q, k, v, a, chunk=max(cfg.ssm_chunk, 32))
+    o = o.transpose(0, 2, 1, 3)  # (B,T,H,hd)
+    o = o + params["D"].astype(jnp.float32)[None, None, :, None] * \
+        xb.reshape(*xb.shape[:2], heads, hd).astype(jnp.float32)
+    return _gated_out(cfg, params, o, z, rules)
+
+
+def mamba_prefill(params, cfg: ModelConfig, x: jax.Array, rules=None
+                  ) -> Tuple[jax.Array, Dict]:
+    """Like mamba_train, but also returns the recurrent state after the
+    last token (for serving: prefill -> decode handoff)."""
+    ct = cfg.compute_dtype
+    di, heads, hd = _dims(cfg)
+    proj = jnp.einsum("btd,dp->btp", x, params["in_proj"].astype(ct))
+    z, xb, B, C, dt = _split_proj(cfg, proj)
+    xb, conv_state = _causal_conv(xb, params["conv_w"].astype(ct),
+                                  params["conv_b"].astype(ct))
+    xb = jax.nn.silu(xb)
+    q, k, v, a = _ssd_inputs(cfg, params, xb, B, C, dt)
+    o, ssm_state = scan_ops.ssd(q, k, v, a, chunk=max(cfg.ssm_chunk, 32))
+    o = o.transpose(0, 2, 1, 3)
+    o = o + params["D"].astype(jnp.float32)[None, None, :, None] * \
+        xb.reshape(*xb.shape[:2], heads, hd).astype(jnp.float32)
+    out = _gated_out(cfg, params, o, z, rules)
+    return out, {"ssm": ssm_state, "conv": conv_state}
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, heads, hd = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, heads, cfg.ssm_state, hd), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+    }
+
+
+def mamba_decode(params, cfg: ModelConfig, x: jax.Array, state: Dict,
+                 rules=None) -> Tuple[jax.Array, Dict]:
+    """x: (B,1,d). O(1) state update — the long_500k win for hybrids."""
+    ct = cfg.compute_dtype
+    di, heads, hd = _dims(cfg)
+    proj = jnp.einsum("btd,dp->btp", x, params["in_proj"].astype(ct))
+    z, xb, B, C, dt = _split_proj(cfg, proj)
+    xb, conv_state = _causal_conv(xb, params["conv_w"].astype(ct),
+                                  params["conv_b"].astype(ct), state["conv"])
+    xb = jax.nn.silu(xb)
+    q, k, v, a = _ssd_inputs(cfg, params, xb, B, C, dt)
+    new_ssm, o = scan_ops.ssd_decode_step(
+        state["ssm"], q[:, 0], k[:, 0], v[:, :, 0], a[:, :, 0])
+    o = o[:, :, None].transpose(0, 2, 1, 3)  # (B,1,H,hd)
+    o = o + params["D"].astype(jnp.float32)[None, None, :, None] * \
+        xb.reshape(xb.shape[0], 1, heads, hd).astype(jnp.float32)
+    out = _gated_out(cfg, params, o, z, rules)
+    return out, {"ssm": new_ssm, "conv": conv_state}

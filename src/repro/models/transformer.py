@@ -1,0 +1,388 @@
+"""Decoder-only stack assembly: blocks, lax.scan over layers, remat.
+
+Families handled here: dense GQA/MLA, MoE (arctic/deepseek segments),
+zamba2 hybrid (mamba groups + weight-shared attention block), rwkv6.
+Whisper's encoder-decoder lives in encdec.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ParallelConfig
+from repro.distributed.sharding import ParamDef, constrain
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import make_norm, mlp_schema, mlp_apply
+
+
+# ---------------------------------------------------------------------------
+# Param stacking for lax.scan
+# ---------------------------------------------------------------------------
+
+def stack_schema(schema, n: int):
+    """Add a leading 'layers' axis to every ParamDef in a layer schema."""
+    def bump(d: ParamDef) -> ParamDef:
+        return ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init, d.scale,
+                        d.dtype)
+    return jax.tree_util.tree_map(bump, schema,
+                                  is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def _policy(name: str):
+    if name == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    if name == "full_save":
+        return jax.checkpoint_policies.everything_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def scan_train(body, stacked, x, aux0=0.0, *, remat: str = "nothing"):
+    """body: (layer_params, x) -> (x, aux). Scans with rematerialization."""
+    def f(carry, lp):
+        h, aux = carry
+        h, a = body(lp, h)
+        return (h, aux + a), None
+
+    f = jax.checkpoint(f, policy=_policy(remat), prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(f, (x, jnp.float32(aux0)), stacked)
+    return x, aux
+
+
+def scan_prefill(body, stacked, x):
+    """body: (lp, x) -> (x, cache_layer); caches stacked on layer axis."""
+    def f(h, lp):
+        h, c = body(lp, h)
+        return h, c
+
+    x, caches = jax.lax.scan(f, x, stacked)
+    return x, caches
+
+
+def scan_decode(body, stacked, caches, x):
+    """body: (x, lp, cache) -> (x, new_cache)."""
+    def f(h, xs):
+        lp, c = xs
+        h, c2 = body(h, lp, c)
+        return h, c2
+
+    x, new_caches = jax.lax.scan(f, x, (stacked, caches))
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+class Blocks:
+    """Per-layer block functions bound to (cfg, parallel, rules)."""
+
+    def __init__(self, cfg: ModelConfig, parallel: ParallelConfig, rules):
+        self.cfg, self.parallel, self.rules = cfg, parallel, rules
+        self.norm_schema, self.norm = make_norm(cfg)
+
+    # ---- dense transformer block (GQA or MLA attention) -------------------
+    def dense_schema(self, d_ff: Optional[int] = None, use_moe: bool = False):
+        cfg = self.cfg
+        sch = {"ln1": self.norm_schema(cfg.d_model),
+               "attn": attn.attention_schema(cfg),
+               "ln2": self.norm_schema(cfg.d_model)}
+        if use_moe:
+            sch["moe"] = moe_mod.moe_schema(cfg)
+        else:
+            sch["mlp"] = mlp_schema(cfg, d_ff)
+        return sch
+
+    def _attn_train(self, p, x):
+        cfg = self.cfg
+        if cfg.attention == "mla":
+            return attn.mla_train(p, cfg, x, self.rules, self.parallel)
+        return attn.gqa_train(p, cfg, x, self.rules, self.parallel)
+
+    def dense_train(self, p, x):
+        # re-assert the residual-stream sharding at block entry: the
+        # scan-of-checkpoint carry stack otherwise loses its annotation
+        # in GSPMD's while-loop propagation (measured: batch replicated
+        # on the (L,B,S,d) saved carries)
+        x = constrain(x, ("batch", "seq", "embed_act"), self.rules)
+        x = x + self._attn_train(p["attn"], self.norm(p["ln1"], x))
+        if "moe" in p:
+            y, aux = moe_mod.moe_apply(p["moe"], self.cfg, self.norm(p["ln2"], x),
+                                       self.rules)
+            return x + y, aux
+        x = x + mlp_apply(p["mlp"], self.cfg, self.norm(p["ln2"], x), self.rules)
+        return x, jnp.float32(0.0)
+
+    def dense_prefill(self, p, x):
+        cfg = self.cfg
+        h = self.norm(p["ln1"], x)
+        if cfg.attention == "mla":
+            y, cache = attn.mla_train(p["attn"], cfg, h, self.rules,
+                                      self.parallel, return_cache=True)
+        else:
+            y, cache = attn.gqa_prefill(p["attn"], cfg, h, self.rules,
+                                        self.parallel)
+        x = x + y
+        if "moe" in p:
+            y, _ = moe_mod.moe_apply(p["moe"], cfg, self.norm(p["ln2"], x),
+                                     self.rules)
+            x = x + y
+        else:
+            x = x + mlp_apply(p["mlp"], cfg, self.norm(p["ln2"], x), self.rules)
+        return x, cache
+
+    def dense_decode(self, p, x, cache, pos):
+        cfg = self.cfg
+        h = self.norm(p["ln1"], x)
+        if cfg.attention == "mla":
+            y, cache = attn.mla_decode(p["attn"], cfg, h, cache, pos, self.rules)
+        else:
+            y, cache = attn.gqa_decode(p["attn"], cfg, h, cache, pos, self.rules)
+        x = x + y
+        if "moe" in p:
+            y, _ = moe_mod.moe_apply(p["moe"], cfg, self.norm(p["ln2"], x),
+                                     self.rules)
+            x = x + y
+        else:
+            x = x + mlp_apply(p["mlp"], cfg, self.norm(p["ln2"], x), self.rules)
+        return x, cache
+
+    # ---- mamba block (zamba2 backbone) -------------------------------------
+    def mamba_schema(self):
+        return {"ln": self.norm_schema(self.cfg.d_model),
+                "mamba": ssm_mod.mamba_schema(self.cfg)}
+
+    def mamba_train(self, p, x):
+        x = constrain(x, ("batch", "seq", "embed_act"), self.rules)
+        return x + ssm_mod.mamba_train(p["mamba"], self.cfg,
+                                       self.norm(p["ln"], x), self.rules), \
+            jnp.float32(0.0)
+
+    def mamba_decode(self, p, x, state):
+        y, state = ssm_mod.mamba_decode(p["mamba"], self.cfg,
+                                        self.norm(p["ln"], x), state, self.rules)
+        return x + y, state
+
+    def mamba_prefill(self, p, x):
+        y, state = ssm_mod.mamba_prefill(p["mamba"], self.cfg,
+                                         self.norm(p["ln"], x), self.rules)
+        return x + y, state
+
+    # ---- rwkv block ---------------------------------------------------------
+    def rwkv_schema(self):
+        d = self.cfg.d_model
+        return {"ln1": self.norm_schema(d),
+                "tm": rwkv_mod.time_mix_schema(self.cfg),
+                "ln2": self.norm_schema(d),
+                "cm": rwkv_mod.channel_mix_schema(self.cfg)}
+
+    def rwkv_train(self, p, x):
+        cfg = self.cfg
+        x = constrain(x, ("batch", "seq", "embed_act"), self.rules)
+        x = x + rwkv_mod.time_mix_train(p["tm"], cfg, self.norm(p["ln1"], x),
+                                        self.rules, chunk=cfg.ssm_chunk)
+        x = x + rwkv_mod.channel_mix_train(p["cm"], cfg, self.norm(p["ln2"], x),
+                                           self.rules)
+        return x, jnp.float32(0.0)
+
+    def rwkv_decode(self, p, x, state):
+        cfg = self.cfg
+        y, tm = rwkv_mod.time_mix_decode(p["tm"], cfg, self.norm(p["ln1"], x),
+                                         state["tm"], self.rules)
+        x = x + y
+        y, cm = rwkv_mod.channel_mix_decode(p["cm"], cfg, self.norm(p["ln2"], x),
+                                            state["cm"], self.rules)
+        return x + y, {"tm": tm, "cm": cm}
+
+    def rwkv_prefill(self, p, x):
+        cfg = self.cfg
+        y, tm = rwkv_mod.time_mix_prefill(p["tm"], cfg, self.norm(p["ln1"], x),
+                                          self.rules, chunk=cfg.ssm_chunk)
+        x = x + y
+        y, cm = rwkv_mod.channel_mix_prefill(p["cm"], cfg,
+                                             self.norm(p["ln2"], x), self.rules)
+        return x + y, {"tm": tm, "cm": cm}
+
+
+# ---------------------------------------------------------------------------
+# Decoder stacks per family
+# ---------------------------------------------------------------------------
+
+class DecoderStack:
+    """Hidden-state pipeline: embeddings in, hidden states out."""
+
+    def __init__(self, cfg: ModelConfig, parallel: ParallelConfig, rules=None):
+        self.cfg, self.parallel, self.rules = cfg, parallel, rules
+        self.blocks = Blocks(cfg, parallel, rules)
+
+    # -- schema ---------------------------------------------------------------
+    def schema(self):
+        cfg, b = self.cfg, self.blocks
+        if cfg.family in ("dense", "vlm"):
+            return {"layers": stack_schema(b.dense_schema(), cfg.num_layers)}
+        if cfg.family == "moe":
+            sch: Dict[str, Any] = {}
+            if cfg.first_k_dense:
+                sch["dense_layers"] = stack_schema(
+                    b.dense_schema(d_ff=cfg.dense_ff or cfg.d_ff),
+                    cfg.first_k_dense)
+            sch["moe_layers"] = stack_schema(
+                b.dense_schema(use_moe=True), cfg.num_layers - cfg.first_k_dense)
+            return sch
+        if cfg.family == "hybrid":
+            return {
+                "mamba_layers": stack_schema(b.mamba_schema(), cfg.num_layers),
+                "shared_attn": b.dense_schema(),  # ONE set of weights, reused
+            }
+        if cfg.family == "ssm":
+            return {"layers": stack_schema(b.rwkv_schema(), cfg.num_layers)}
+        raise ValueError(cfg.family)
+
+    # -- helpers ---------------------------------------------------------------
+    def _groups(self):
+        cfg = self.cfg
+        g = cfg.shared_attn_every or cfg.num_layers
+        sizes = []
+        rest = cfg.num_layers
+        while rest > 0:
+            sizes.append(min(g, rest))
+            rest -= g
+        return sizes
+
+    @staticmethod
+    def _slice_stack(stacked, start, size):
+        return jax.tree_util.tree_map(lambda a: a[start:start + size], stacked)
+
+    # -- train -------------------------------------------------------------------
+    def train_hidden(self, params, x) -> Tuple[jax.Array, jax.Array]:
+        cfg, b = self.cfg, self.blocks
+        remat = self.parallel.remat_policy
+        if cfg.family in ("dense", "vlm"):
+            return scan_train(b.dense_train, params["layers"], x, remat=remat)
+        if cfg.family == "moe":
+            aux = jnp.float32(0.0)
+            if cfg.first_k_dense:
+                x, aux = scan_train(b.dense_train, params["dense_layers"], x,
+                                    remat=remat)
+            x, aux2 = scan_train(b.dense_train, params["moe_layers"], x,
+                                 remat=remat)
+            return x, aux + aux2
+        if cfg.family == "hybrid":
+            start = 0
+            for size in self._groups():
+                seg = self._slice_stack(params["mamba_layers"], start, size)
+                x, _ = scan_train(b.mamba_train, seg, x, remat=remat)
+                x, _ = b.dense_train(params["shared_attn"], x)
+                start += size
+            return x, jnp.float32(0.0)
+        if cfg.family == "ssm":
+            return scan_train(b.rwkv_train, params["layers"], x, remat=remat)
+        raise ValueError(cfg.family)
+
+    # -- prefill -------------------------------------------------------------------
+    def prefill_hidden(self, params, x):
+        cfg, b = self.cfg, self.blocks
+        if cfg.family in ("dense", "vlm"):
+            return scan_prefill(b.dense_prefill, params["layers"], x)
+        if cfg.family == "moe":
+            caches = {}
+            if cfg.first_k_dense:
+                x, caches["dense"] = scan_prefill(b.dense_prefill,
+                                                  params["dense_layers"], x)
+            x, caches["moe"] = scan_prefill(b.dense_prefill,
+                                            params["moe_layers"], x)
+            return x, caches
+        if cfg.family == "hybrid":
+            mamba_states, attn_caches = [], []
+            start = 0
+            for size in self._groups():
+                seg = self._slice_stack(params["mamba_layers"], start, size)
+                x, st = scan_prefill(b.mamba_prefill, seg, x)
+                mamba_states.append(st)
+                x, ac = b.dense_prefill(params["shared_attn"], x)
+                attn_caches.append(ac)
+                start += size
+            cat = lambda *xs: jnp.concatenate(xs, axis=0)
+            stk = lambda *xs: jnp.stack(xs, axis=0)
+            return x, {
+                "mamba": jax.tree_util.tree_map(cat, *mamba_states),
+                "attn": jax.tree_util.tree_map(stk, *attn_caches),
+            }
+        if cfg.family == "ssm":
+            return scan_prefill(b.rwkv_prefill, params["layers"], x)
+        raise ValueError(cfg.family)
+
+    # -- decode -------------------------------------------------------------------
+    def decode_hidden(self, params, x, caches, pos):
+        cfg, b = self.cfg, self.blocks
+        dec = functools.partial(b.dense_decode, pos=pos)
+        body = lambda h, lp, c: dec(lp, h, c)
+        if cfg.family in ("dense", "vlm"):
+            return scan_decode(body, params["layers"], caches, x)
+        if cfg.family == "moe":
+            new = {}
+            if cfg.first_k_dense:
+                x, new["dense"] = scan_decode(body, params["dense_layers"],
+                                              caches["dense"], x)
+            x, new["moe"] = scan_decode(body, params["moe_layers"],
+                                        caches["moe"], x)
+            return x, new
+        if cfg.family == "hybrid":
+            new_m, new_a = [], []
+            start = 0
+            for gi, size in enumerate(self._groups()):
+                seg = self._slice_stack(params["mamba_layers"], start, size)
+                st = self._slice_stack(caches["mamba"], start, size)
+                x, st2 = scan_decode(lambda h, lp, c: b.mamba_decode(lp, h, c),
+                                     seg, st, x)
+                new_m.append(st2)
+                ac = jax.tree_util.tree_map(lambda a: a[gi], caches["attn"])
+                x, ac2 = b.dense_decode(params["shared_attn"], x, ac, pos)
+                new_a.append(ac2)
+                start += size
+            cat = lambda *xs: jnp.concatenate(xs, axis=0)
+            stk = lambda *xs: jnp.stack(xs, axis=0)
+            return x, {
+                "mamba": jax.tree_util.tree_map(cat, *new_m),
+                "attn": jax.tree_util.tree_map(stk, *new_a),
+            }
+        if cfg.family == "ssm":
+            return scan_decode(lambda h, lp, c: b.rwkv_decode(lp, h, c),
+                               params["layers"], caches, x)
+        raise ValueError(cfg.family)
+
+    # -- cache init -------------------------------------------------------------------
+    def init_cache(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        dt = cfg.compute_dtype
+        if cfg.family in ("dense", "vlm"):
+            return attn.init_cache(cfg, batch, seq_len, cfg.num_layers, dt)
+        if cfg.family == "moe":
+            caches = {}
+            if cfg.first_k_dense:
+                caches["dense"] = attn.init_cache(cfg, batch, seq_len,
+                                                  cfg.first_k_dense, dt)
+            caches["moe"] = attn.init_cache(
+                cfg, batch, seq_len, cfg.num_layers - cfg.first_k_dense, dt)
+            return caches
+        if cfg.family == "hybrid":
+            n_groups = len(self._groups())
+            per_layer = ssm_mod.mamba_init_state(cfg, batch, dt)
+            mamba = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None],
+                                           (cfg.num_layers,) + a.shape).copy(),
+                per_layer)
+            return {"mamba": mamba,
+                    "attn": attn.init_cache(cfg, batch, seq_len, n_groups, dt)}
+        if cfg.family == "ssm":
+            per_layer = rwkv_mod.rwkv_init_state(cfg, batch, dt)
+            return jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None],
+                                           (cfg.num_layers,) + a.shape).copy(),
+                per_layer)
+        raise ValueError(cfg.family)

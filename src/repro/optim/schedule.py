@@ -1,0 +1,23 @@
+"""LR schedules (pure functions of the step, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_schedule(step, *, peak: float, warmup: int, total: int,
+                    floor: float = 0.0):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak * s / max(warmup, 1)
+    frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    decay = peak + (floor - peak) * frac
+    return jnp.where(s < warmup, warm, decay)
+
+
+def cosine_schedule(step, *, peak: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak * s / max(warmup, 1)
+    frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    floor = peak * floor_frac
+    decay = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(s < warmup, warm, decay)

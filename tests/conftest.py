@@ -1,0 +1,15 @@
+# Tests run on the host's single CPU device — the 512-placeholder-device
+# XLA flag belongs to launch/dryrun.py ONLY and must never be set here.
+import jax
+import pytest
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def assert_no_nan(tree, where=""):
+    import jax.numpy as jnp
+    for leaf in jax.tree_util.tree_leaves(tree):
+        assert jnp.isfinite(leaf).all(), f"non-finite values {where}"

@@ -1,0 +1,66 @@
+"""Cross-fitting engine invariants (paper C1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.crossfit import (crossfit_parallel, crossfit_sequential,
+                                 fold_ids, fold_weights, _oof_select)
+from repro.core.nuisance import Nuisance, make_ridge
+
+
+def test_fold_ids_balanced(key):
+    folds = fold_ids(key, 1000, 5)
+    counts = np.bincount(np.asarray(folds), minlength=5)
+    assert counts.min() == counts.max() == 200
+
+
+def test_fold_weights_complement(key):
+    folds = fold_ids(key, 100, 4)
+    W = fold_weights(folds, 4)
+    assert W.shape == (4, 100)
+    # each sample is excluded from exactly ONE fold-model's training set
+    np.testing.assert_array_equal(np.asarray(W.sum(0)), 3.0 * np.ones(100))
+    for j in range(4):
+        np.testing.assert_array_equal(np.asarray(W[j] == 0.0),
+                                      np.asarray(folds == j))
+
+
+def test_oof_is_truly_out_of_fold(key):
+    """A 'memorizing' nuisance proves row i's prediction cannot come from
+    a model that saw row i."""
+    n, k = 60, 3
+    folds = fold_ids(key, n, k)
+
+    def fit(state, X, y, w):
+        return {"seen": w}  # remember exactly which rows were trained on
+
+    def predict(state, X):
+        return state["seen"]  # 'prediction' = did I train on this row?
+
+    memorizer = Nuisance("mem", "reg", lambda key, p: {}, fit, predict)
+    X = jnp.zeros((n, 2))
+    y = jnp.zeros((n,))
+    oof, _ = crossfit_parallel(memorizer, key, X, y, folds, k)
+    # every row must be predicted by the model that did NOT train on it
+    np.testing.assert_array_equal(np.asarray(oof), np.zeros(n))
+
+
+def test_parallel_equals_sequential_predictions(key):
+    n, p, k = 500, 8, 5
+    ks = jax.random.split(key, 3)
+    X = jax.random.normal(ks[0], (n, p))
+    y = X @ jax.random.normal(ks[1], (p,)) + 0.1 * jax.random.normal(
+        ks[2], (n,))
+    folds = fold_ids(key, n, k)
+    ridge = make_ridge(1e-3)
+    oof_p, _ = crossfit_parallel(ridge, key, X, y, folds, k)
+    oof_s, _ = crossfit_sequential(ridge, key, X, y, folds, k)
+    np.testing.assert_allclose(oof_p, oof_s, rtol=1e-5, atol=1e-5)
+
+
+def test_oof_select(key):
+    preds = jnp.arange(12, dtype=jnp.float32).reshape(3, 4)  # (k=3, n=4)
+    folds = jnp.asarray([2, 0, 1, 0], jnp.int32)
+    out = _oof_select(preds, folds)
+    np.testing.assert_array_equal(np.asarray(out), [8., 1., 6., 3.])

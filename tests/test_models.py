@@ -1,0 +1,122 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch at a
+reduced config runs one forward/train step on CPU with finite outputs and
+correct shapes, plus the strongest serving-correctness check we have:
+prefill + decode reproduces the train-path logits position by position.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.model import build_model
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    tk = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tk, "labels": jnp.roll(tk, -1, axis=1)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = 0.1 * jax.random.normal(
+            key, (B, 8, cfg.d_model), cfg.compute_dtype)
+    if cfg.is_encdec:
+        batch["frames"] = 0.1 * jax.random.normal(
+            key, (B, cfg.max_source_positions, cfg.d_model),
+            cfg.compute_dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_shapes_and_finite(arch, key):
+    cfg = get_config(arch + "-smoke")
+    model = build_model(cfg)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+    logits, aux = model.forward_train(params, batch)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert jnp.isfinite(logits).all(), arch
+    loss, metrics = model.loss_fn(params, batch)
+    assert jnp.isfinite(loss), arch
+    # one gradient step must be finite too
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    for leaf in jax.tree_util.tree_leaves(grads):
+        assert jnp.isfinite(leaf).all(), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_train_logits(arch, key):
+    """Serving correctness: teacher-forced decode logits == train-path
+    logits at every generated position."""
+    cfg = get_config(arch + "-smoke")
+    model = build_model(cfg)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+    full_logits, _ = model.forward_train(params, batch)
+
+    split = S // 2
+    pre = {k: (v[:, :split] if k in ("tokens", "labels") else v)
+           for k, v in batch.items() if k != "labels"}
+    logits, cache = model.prefill(params, pre)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, -1], np.float32),
+        np.asarray(full_logits[:, split - 1], np.float32),
+        rtol=2e-3, atol=2e-3)
+
+    # grow every seq-carrying cache leaf to S and continue teacher-forced
+    # (recurrent ssm/rwkv states are same-shape and pass through)
+    big = model.init_cache(B, S)
+    def splice(dst, src):
+        if dst.shape == src.shape:
+            return src.astype(dst.dtype)
+        ax = [i for i in range(dst.ndim) if dst.shape[i] != src.shape[i]][0]
+        return jax.lax.dynamic_update_slice_in_dim(
+            dst, src.astype(dst.dtype), 0, axis=ax)
+    cache = jax.tree_util.tree_map(splice, big, cache)
+
+    for pos in range(split, S):
+        tok = batch["tokens"][:, pos][:, None]
+        logits, cache = model.decode_step(params, tok, cache,
+                                          jnp.int32(pos))
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0], np.float32),
+            np.asarray(full_logits[:, pos], np.float32),
+            rtol=5e-3, atol=5e-3)
+
+
+def test_padded_vocab_ce_is_exact(key):
+    """Pad logits are masked to -inf: CE over padded vocab == CE over the
+    unpadded slice."""
+    cfg = get_config("granite-3-2b-smoke")
+    cfg = dataclasses.replace(cfg, vocab_size=250)  # padded_vocab = 256
+    model = build_model(cfg)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+    logits, _ = model.forward_train(params, batch)
+    assert logits.shape[-1] == 256
+    assert float(logits[..., 250:].max()) < -1e29
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    assert float(probs[..., 250:].sum()) < 1e-6
+
+
+def test_mtp_head_runs(key):
+    """DeepSeek MTP flag: extra head trains and adds a finite aux loss."""
+    cfg = dataclasses.replace(get_config("deepseek-v3-671b-smoke"),
+                              mtp_depth=1)
+    model = build_model(cfg)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+    loss, metrics = model.loss_fn(params, batch)
+    assert jnp.isfinite(loss)
+    assert float(metrics["aux"]) != 0.0  # MTP CE contributes
+
+
+def test_features_pool_shape(key):
+    cfg = get_config("rwkv6-3b-smoke")
+    model = build_model(cfg)
+    params = model.init(key)
+    feats = model.features(params, {"tokens": _batch(cfg, key)["tokens"]})
+    assert feats.shape == (B, cfg.d_model)
+    assert jnp.isfinite(feats).all()

@@ -1,0 +1,124 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.crossfit import fold_ids, fold_weights
+from repro.distributed.sharding import ShardingRules, logical_to_spec
+from repro.kernels.ssm_scan import ref as gla_ref
+from repro.models import attention as attn_mod
+from repro.optim.compression import compress_decompress
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(10, 500), k=st.integers(2, 8), seed=st.integers(0, 99))
+def test_fold_partition_invariants(n, k, seed):
+    folds = fold_ids(jax.random.PRNGKey(seed), n, k)
+    W = fold_weights(folds, k)
+    f = np.asarray(folds)
+    assert f.min() >= 0 and f.max() < k
+    # balanced within 1
+    counts = np.bincount(f, minlength=k)
+    assert counts.max() - counts.min() <= 1
+    # every sample trains k-1 models and is held out of exactly 1
+    np.testing.assert_array_equal(np.asarray(W.sum(0)), (k - 1.0))
+
+
+@settings(**SETTINGS)
+@given(b=st.integers(1, 2), h=st.integers(1, 3),
+       nchunks=st.integers(1, 4), dk=st.sampled_from([4, 8, 16]),
+       dv=st.sampled_from([4, 8]), mode=st.sampled_from(["post", "bonus"]),
+       seed=st.integers(0, 999))
+def test_gla_chunked_equals_naive(b, h, nchunks, dk, dv, mode, seed):
+    t = 16 * nchunks
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (b, h, t, dk))
+    k = jax.random.normal(ks[1], (b, h, t, dk))
+    v = jax.random.normal(ks[2], (b, h, t, dv))
+    w = 0.05 + 0.95 * jax.random.uniform(ks[3], (b, h, t, dk))
+    u = None if mode == "post" else jax.random.normal(ks[4], (h, dk))
+    o1, s1 = gla_ref.gla_chunked_ref(q, k, v, w, u, chunk=16)
+    o2, s2 = gla_ref.gla_naive(q, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=5e-4, atol=5e-4)
+
+
+@settings(**SETTINGS)
+@given(sq=st.sampled_from([32, 64]), h=st.integers(1, 4),
+       kv_ratio=st.sampled_from([1, 2, 4]), d=st.sampled_from([8, 16]),
+       causal=st.booleans(), seed=st.integers(0, 999))
+def test_chunked_attention_equals_dense(sq, h, kv_ratio, d, causal, seed):
+    heads = h * kv_ratio
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, sq, heads, d))
+    k = jax.random.normal(ks[1], (1, sq, h, d))
+    v = jax.random.normal(ks[2], (1, sq, h, d))
+    dense = attn_mod._sdpa(q, k, v, causal=causal)
+    chunked = attn_mod._chunked_attn(q, k, v, causal=causal, chunk=16)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               rtol=5e-5, atol=5e-5)
+
+
+@settings(**SETTINGS)
+@given(scale=st.floats(1e-4, 1e4), n=st.sampled_from([16, 257]),
+       method=st.sampled_from(["bf16", "int8"]), seed=st.integers(0, 99))
+def test_compression_relative_error_bounded(scale, n, method, seed):
+    g = scale * jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    rec = compress_decompress(g, method)
+    num = float(jnp.linalg.norm(rec - g))
+    den = float(jnp.linalg.norm(g)) + 1e-30
+    assert num / den < 0.03
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 99), frac=st.sampled_from([0.5, 1.0]))
+def test_rope_preserves_norm_and_relativity(seed, frac):
+    """RoPE is an orthogonal per-position rotation: norms preserved, and
+    <rope(q,m), rope(k,n)> depends only on (m - n)."""
+    from repro.config import ModelConfig
+    from repro.models.layers import apply_rope, rope_frequencies
+    cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=32,
+                      num_heads=1, num_kv_heads=1, head_dim=16, d_ff=32,
+                      vocab_size=64, rope_fraction=frac)
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, 4, 1, 16))
+    positions = jnp.arange(4)[None, :]
+    sin, cos = rope_frequencies(cfg, positions)
+    q_r = apply_rope(q, sin, cos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(q), axis=-1),
+        np.linalg.norm(np.asarray(q_r), axis=-1), rtol=1e-5)
+    # relativity: shift both positions by a constant -> same dot product
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 4, 1, 16))
+    k_r = apply_rope(k, sin, cos)
+    dots1 = np.einsum("bshd,bthd->bst", np.asarray(q_r), np.asarray(k_r))
+    sin2, cos2 = rope_frequencies(cfg, positions + 5)
+    q_r2 = apply_rope(q, sin2, cos2)
+    k_r2 = apply_rope(k, sin2, cos2)
+    dots2 = np.einsum("bshd,bthd->bst", np.asarray(q_r2), np.asarray(k_r2))
+    np.testing.assert_allclose(dots1, dots2, rtol=1e-3, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 999))
+def test_spec_never_reuses_mesh_axis(seed):
+    """logical_to_spec must never emit a PartitionSpec using one mesh
+    axis twice (GSPMD rejects it)."""
+    rng = np.random.RandomState(seed)
+    names = ["batch", "seq", "vocab", "heads", "ff", "embed"]
+    mesh_axes = ["data", "model", None]
+    rules = ShardingRules(rules=tuple(
+        (n, mesh_axes[rng.randint(3)]) for n in names))
+    axes = tuple(names[rng.randint(len(names))]
+                 for _ in range(rng.randint(1, 5)))
+    spec = logical_to_spec(axes, rules)
+    flat = [a for p in spec for a in
+            (p if isinstance(p, tuple) else (p,)) if a]
+    assert len(flat) == len(set(flat)), (axes, spec)

@@ -1,0 +1,85 @@
+"""Integration: the end-to-end training driver learns the synthetic
+stream, and the batched server produces the same tokens as an unbatched
+greedy reference."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ParallelConfig, TrainConfig
+from repro.configs import get_config
+from repro.data.lm_data import lm_batch
+from repro.launch.serve import BatchServer, Request
+from repro.launch.train import make_train_step
+from repro.models.model import build_model
+from repro.optim.adamw import adamw_init
+
+
+def test_training_reduces_loss(key):
+    cfg = dataclasses.replace(get_config("granite-3-2b-smoke"),
+                              num_layers=2, vocab_size=97)
+    model = build_model(cfg)
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=5, total_steps=150)
+    step_fn = jax.jit(make_train_step(model, tcfg))
+    params = model.init(key)
+    opt = adamw_init(params)
+    losses = []
+    for s in range(150):
+        batch = lm_batch(jax.random.fold_in(key, s), 8, 32, cfg.vocab_size)
+        params, opt, m = step_fn(params, opt, batch)
+        losses.append(float(m["loss"]))
+    # the 97-token bigram permutation needs ~50k tokens to crack; at
+    # 256 tokens/step we assert a solid descent, not convergence
+    assert losses[-1] < losses[0] - 0.4, (losses[0], losses[-1])
+
+
+def test_microbatched_step_matches_full_batch(key):
+    """Gradient accumulation is numerically the same step."""
+    cfg = dataclasses.replace(get_config("granite-3-2b-smoke"),
+                              num_layers=1, vocab_size=97)
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=1, total_steps=10)
+    m1 = build_model(cfg, ParallelConfig(microbatch=1))
+    m4 = build_model(cfg, ParallelConfig(microbatch=4))
+    params = m1.init(key)
+    opt = adamw_init(params)
+    batch = lm_batch(key, 8, 32, cfg.vocab_size)
+    p1, _, met1 = jax.jit(make_train_step(m1, tcfg))(params, opt, batch)
+    p4, _, met4 = jax.jit(make_train_step(m4, tcfg))(params, opt, batch)
+    np.testing.assert_allclose(float(met1["loss"]), float(met4["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_batch_server_matches_manual_greedy(key):
+    cfg = get_config("granite-3-2b-smoke")
+    model = build_model(cfg)
+    params = model.init(key)
+    server = BatchServer(model, params, max_seq=64)
+    prompts = [jax.random.randint(jax.random.fold_in(key, i), (8,), 0,
+                                  cfg.vocab_size) for i in range(2)]
+    # same-length prompts: wave batching must equal per-request greedy
+    outs = server.serve_wave([Request(p, max_new_tokens=5) for p in prompts])
+    for i, p in enumerate(prompts):
+        solo = server.serve_wave([Request(p, max_new_tokens=5)])
+        assert outs[i].tokens == solo[0].tokens, i
+
+
+def test_compressed_training_still_learns(key):
+    cfg = dataclasses.replace(get_config("granite-3-2b-smoke"),
+                              num_layers=1, vocab_size=97)
+    model = build_model(cfg, ParallelConfig(gradient_compression="int8"))
+    tcfg = TrainConfig(learning_rate=3e-3, warmup_steps=5, total_steps=120)
+    step_fn = jax.jit(make_train_step(model, tcfg))
+    params = model.init(key)
+    opt = adamw_init(params)
+    losses = []
+    for s in range(120):
+        batch = lm_batch(jax.random.fold_in(key, s), 8, 32, cfg.vocab_size)
+        params, opt, m = step_fn(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3

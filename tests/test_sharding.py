@@ -1,0 +1,96 @@
+"""Sharding policy: every (arch x shape x mesh) cell's parameter and
+input specs must divide evenly — the fast (no-lowering) half of the
+multi-pod dry-run, covering all 40 cells x 2 meshes on one CPU device."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.config import SHAPES
+from repro.configs import ARCH_IDS
+from repro.launch.cells import batch_pspecs, cache_pspecs, make_cell
+from repro.distributed.sharding import logical_to_spec, param_specs
+
+AXIS_SIZE = {"data": 16, "model": 16, "pod": 2}
+
+
+def _check_divisible(shape, spec, where):
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for dim, p in zip(shape, parts):
+        if p is None:
+            continue
+        axes = p if isinstance(p, tuple) else (p,)
+        n = 1
+        for a in axes:
+            n *= AXIS_SIZE[a]
+        assert dim % n == 0, f"{where}: dim {dim} not divisible by {n} ({spec})"
+
+
+@pytest.mark.parametrize("multi_pod", [False, True])
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_all_cells_shardable(arch, multi_pod):
+    for shape in SHAPES:
+        cell = make_cell(arch, shape.name, multi_pod=multi_pod)
+        model = cell.model()
+        ok, _ = model.supports_shape(shape)
+        if not ok:
+            continue
+        # parameters
+        schema = model.schema()
+        specs = param_specs(schema, cell.rules)
+        import jax.tree_util as jtu
+        defs = jtu.tree_leaves(
+            schema, is_leaf=lambda x: hasattr(x, "axes"))
+        spec_leaves = jtu.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        for d, s in zip(defs, spec_leaves):
+            _check_divisible(d.shape, s, f"{cell.name} param")
+        # inputs
+        inputs = model.input_specs(shape)
+        if shape.kind in ("train", "prefill"):
+            ps = batch_pspecs(cell)
+            for k, v in inputs.items():
+                _check_divisible(v.shape, ps[k], f"{cell.name} input {k}")
+        else:
+            cache_sp = cache_pspecs(cell, inputs["cache"])
+            cl = jtu.tree_leaves(inputs["cache"])
+            sl = jtu.tree_leaves(cache_sp,
+                                 is_leaf=lambda x: isinstance(x, P))
+            for leaf, s in zip(cl, sl):
+                _check_divisible(leaf.shape, s, f"{cell.name} cache")
+
+
+def test_dedup_under_sequence_parallel():
+    cell = make_cell("granite-3-2b", "train_4k")
+    # logits: seq must NOT claim "model" (vocab owns it)
+    spec = logical_to_spec(("batch", "logits_seq", "vocab"), cell.rules)
+    assert spec == P("data", None, "model")
+    # residual stream: seq DOES claim model (SP)
+    spec = logical_to_spec(("batch", "seq", "embed_act"), cell.rules)
+    assert spec == P("data", "model", None)
+
+
+def test_head_indivisible_archs_fall_back():
+    """yi (56 heads) cannot TP over 16: heads replicated, q seq-sharded."""
+    cell = make_cell("yi-34b", "train_4k")
+    assert cell.rules.get("heads") is None
+    assert cell.rules.get("attn_seq") == "model"
+    # granite (32 heads) does TP its heads
+    cell2 = make_cell("granite-3-2b", "train_4k")
+    assert cell2.rules.get("heads") == "model"
+    assert cell2.rules.get("attn_seq") is None
+
+
+def test_moe_expert_parallel_over_dp():
+    cell = make_cell("deepseek-v3-671b", "train_4k")
+    assert cell.rules.get("experts") == "data"
+    cell_mp = make_cell("deepseek-v3-671b", "decode_32k", multi_pod=True)
+    assert cell_mp.rules.get("experts") == ("pod", "data")
+
+
+def test_long_context_cache_spec():
+    cell = make_cell("zamba2-1.2b", "long_500k")
+    model = cell.model()
+    inputs = model.input_specs(cell.shape)
+    sp = cache_pspecs(cell, inputs["cache"])
+    # attention KV seq sharded over the DP axis (batch=1 frees it)
+    assert sp["attn"]["k"][2] == "data"
