@@ -1,0 +1,86 @@
+"""Bootstrap inference runtime: sequential-loop baseline vs batched
+executor — the Fig.-6-style mechanism comparison for the THIRD iterative
+step class (after bench_crossfit's fold fits and bench_tuning's trials).
+
+EconML's ``BootstrapInference(B)`` re-runs the estimator B times; Ray
+schedules those as B tasks.  On one host the translation is the
+Executor: ``serial`` dispatches B separate programs (the Ray-less
+baseline), ``vmap`` stacks the B weighted refits into ONE compiled
+program, ``shard_map`` additionally shards the replicate axis over the
+device mesh.  The speedup isolates dispatch overhead + compile reuse +
+shared data passes, the same mechanism the paper measures.
+
+Defaults are CPU-friendly; ``--full`` runs a paper-scale sweep.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import CausalConfig
+from repro.core.dml import DML
+from repro.data.causal_dgp import make_causal_data
+from repro.inference import make_executor
+from repro.inference.bootstrap import make_dml_replicate_fn, replicate_keys
+
+
+def time_bootstrap(ctx, n_folds: int, B: int, executor: str,
+                   key, reps: int = 1) -> float:
+    """Wall-clock for B bootstrap replicates through one executor.  The
+    replicate closure is built once and warmed up, so the measurement
+    isolates the paper's mechanism — B dispatched programs vs one
+    batched program — not XLA compile time (same methodology as
+    bench_crossfit's warm-up)."""
+    exe = make_executor(executor)
+    fn = make_dml_replicate_fn(ctx.nuis_y, ctx.nuis_t, n_folds,
+                               with_se=False)
+    keys = replicate_keys(key, B)
+
+    def run():
+        jax.block_until_ready(
+            exe.map(fn, keys, ctx.XW, ctx.y, ctx.t, ctx.phi)["theta"])
+
+    run()  # warm-up/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        run()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(sizes, p, B=64, n_folds=5, key=None, csv=print):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    rows = []
+    for n in sizes:
+        data = make_causal_data(jax.random.fold_in(key, n), n, p,
+                                effect=1.0)
+        est = DML(CausalConfig(n_folds=n_folds))
+        ctx = est.fit(data.y, data.t, data.X, key=key).fit_ctx
+        kb = jax.random.fold_in(key, 0x0b00)
+        t_seq = time_bootstrap(ctx, n_folds, B, "serial", kb)
+        t_vec = time_bootstrap(ctx, n_folds, B, "vmap", kb)
+        t_shm = time_bootstrap(ctx, n_folds, B, "shard_map", kb)
+        csv(f"bootstrap_seq_n{n}_p{p}_B{B},{t_seq*1e6:.0f},baseline")
+        csv(f"bootstrap_vmap_n{n}_p{p}_B{B},{t_vec*1e6:.0f},speedup="
+            f"{t_seq/t_vec:.2f}x")
+        csv(f"bootstrap_shard_n{n}_p{p}_B{B},{t_shm*1e6:.0f},speedup="
+            f"{t_seq/t_shm:.2f}x")
+        rows.append((n, t_seq, t_vec, t_shm))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale n sweep with B=200")
+    args = ap.parse_args(argv)
+    if args.full:
+        run(sizes=(10_000, 100_000), p=500, B=200)
+    else:
+        run(sizes=(5_000, 10_000), p=20, B=32)
+
+
+if __name__ == "__main__":
+    main()

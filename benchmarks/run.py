@@ -24,6 +24,13 @@ def main(argv=None):
     from benchmarks import bench_tuning
     bench_tuning.run(n=20_000, p=50, n_trials=8, n_folds=5)
 
+    print("# --- bootstrap inference: serial vs batched executor ---")
+    from benchmarks import bench_inference
+    if args.full:
+        bench_inference.run(sizes=(10_000, 100_000), p=500, B=200)
+    else:
+        bench_inference.run(sizes=(5_000, 10_000), p=20, B=32)
+
     print("# --- kernel micro-benchmarks ---")
     from benchmarks import bench_kernels
     bench_kernels.main()

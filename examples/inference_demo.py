@@ -1,0 +1,55 @@
+"""Bootstrap confidence intervals as ONE batched program.
+
+EconML equivalent (the expensive path the paper's Ray translation
+targets — B full re-estimations scheduled as tasks):
+
+    est = LinearDML(...)
+    est.fit(y, T, X=X, inference=BootstrapInference(n_bootstrap_samples=200))
+    est.ate_interval(X)
+
+Here the B replicates are weighted refits stacked on a replicate axis
+and dispatched by the pluggable Executor (serial | vmap | shard_map) —
+``vmap`` runs all 200 as one compiled program.
+
+    PYTHONPATH=src python examples/inference_demo.py
+"""
+import jax
+
+from repro.config import CausalConfig
+from repro.core.dml import DML
+from repro.data.causal_dgp import make_causal_data
+
+key = jax.random.PRNGKey(0)
+data = make_causal_data(jax.random.PRNGKey(42), 5_000, 10,
+                        heterogeneous=True, effect=1.0)
+
+cfg = CausalConfig(
+    n_folds=5,
+    cate_features=2,          # theta(x) = b0 + b1·x0
+    inference="bootstrap",    # pairs bootstrap (multiplier|jackknife too)
+    n_bootstrap=200,          # EconML's n_bootstrap_samples
+    alpha=0.05,
+    inference_executor="vmap",  # all 200 refits in ONE program
+)
+
+res = DML(cfg).fit(data.y, data.t, data.X, key=key)
+print(f"true ATE      : {data.true_ate:+.4f}")
+print(f"estimated ATE : {res.ate_of(data.X):+.4f}")
+
+lo, hi = res.ate_interval()               # 200 vmapped replicates
+print(f"bootstrap CI  : [{lo:+.4f}, {hi:+.4f}]  (percentile, B=200)")
+
+jk = res.inference(method="jackknife")    # near-free: reuses fold fits
+print(f"jackknife CI  : [{jk.ate_interval()[0]:+.4f}, "
+      f"{jk.ate_interval()[1]:+.4f}]")
+print(f"IF sandwich se: {float(res.stderr[0]):.4f}  "
+      f"jackknife se: {float(jk.se[0]):.4f}  "
+      f"bootstrap se: {float(res.inference().se[0]):.4f}")
+
+# pointwise CATE bands at a few covariate profiles
+Xq = data.X[:5]
+band_lo, band_hi = res.cate_interval(Xq)
+for i in range(5):
+    print(f"CATE(x{i}): {float(res.cate(Xq)[i]):+.3f} in "
+          f"[{float(band_lo[i]):+.3f}, {float(band_hi[i]):+.3f}]  "
+          f"(true {float(data.true_cate[i]):+.3f})")

@@ -34,13 +34,20 @@ cfg = CausalConfig(
     cate_features=2,           # theta(x) = b0 + b1 * x0  (the true CATE)
     discrete_treatment=True,
     engine="parallel",         # the paper's contribution (C1)
-)
+    inference="jackknife",     # near-free CI at this n (reuses fold
+)                              # fits); bootstrap demo: inference_demo.py
 
 est = DML(cfg)
 res = est.fit(data.y, data.t, data.X, key=key)
 print(res.summary())
 print(f"\ntrue ATE = {float(data.true_cate.mean()):.4f}   "
       f"estimated ATE = {res.ate_of(data.X):.4f}")
+
+# replicate-based CI via the repro.inference executor (jackknife here:
+# k delete-fold re-solves of the final stage, no nuisance refits)
+lo, hi = res.ate_interval()
+print(f"{cfg.inference} {100 * (1 - cfg.alpha):.0f}% CI for theta0: "
+      f"[{lo:+.4f}, {hi:+.4f}]")
 
 print("\nNEXUS validation suite (refutation tests):")
 for report in run_all(cfg, data.y, data.t, data.X, key=key):

@@ -242,6 +242,11 @@ class CausalConfig:
     mlp_lr: float = 1e-3
     discrete_treatment: bool = True
     engine: str = "parallel"  # parallel (paper, C1) | sequential (EconML baseline)
+    # --- uncertainty quantification (repro.inference subsystem) ---
+    inference: str = "bootstrap"  # bootstrap (pairs) | multiplier | jackknife | none
+    n_bootstrap: int = 200        # B replicates (EconML BootstrapInference)
+    alpha: float = 0.05           # CI level: 1 - alpha
+    inference_executor: str = "vmap"  # serial | vmap | shard_map
 
 
 def smoke_variant(cfg: ModelConfig, **overrides: Any) -> ModelConfig:

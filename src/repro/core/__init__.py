@@ -6,6 +6,9 @@
 #   final_stage.py  orthogonal moment via the fused residual_gram kernel
 #   refutation.py   NEXUS validation suite (placebo / RCC / subset)
 #   estimands.py    ATE/ATT/CATE summaries + diagnostics
+# Uncertainty quantification (bootstrap/jackknife CIs) lives in
+# repro.inference; tuning + refutation replicate loops dispatch through
+# its Executor.
 from repro.core.dml import DML, DMLResult  # noqa: F401
 from repro.core.crossfit import (crossfit, crossfit_parallel,  # noqa: F401
     crossfit_parallel_loo, crossfit_sequential)

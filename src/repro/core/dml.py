@@ -10,11 +10,13 @@ Usage (mirrors the paper's §5.1 listing):
                            nuisance_t="logistic", engine="parallel"))
     res = est.fit(y, t, X=X, key=jax.random.PRNGKey(0))
     res.ate, res.stderr, res.cate(X_new)
+    res.ate_interval()            # B=cfg.n_bootstrap replicates, one
+    res.cate_interval(X_new)      # vmapped program (repro.inference)
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +29,21 @@ from repro.core.nuisance import Nuisance, make_nuisance
 
 
 @dataclasses.dataclass(frozen=True)
+class FitContext:
+    """Everything needed to re-run the estimation as one batched program
+    (bootstrap replicates re-derive folds from ``key`` for exact replay)."""
+
+    y: jax.Array
+    t: jax.Array
+    XW: jax.Array     # nuisance covariates (X ++ W)
+    phi: jax.Array    # (n, p_phi) CATE basis
+    key: jax.Array
+    nuis_y: Nuisance
+    nuis_t: Nuisance
+    rules: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
 class DMLResult:
     theta: jax.Array             # (p_phi,) final-stage coefficients
     cov: jax.Array               # (p_phi, p_phi)
@@ -34,6 +51,9 @@ class DMLResult:
     crossfit: CrossfitResult
     final: FinalStageResult
     diagnostics: Diagnostics
+    fit_ctx: Optional[FitContext] = None
+    _inf_cache: Dict[Any, Any] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def ate(self) -> float:
@@ -54,10 +74,77 @@ class DMLResult:
         return float(self.cate(X).mean())
 
     def conf_int(self, alpha: float = 0.05):
-        z = 1.959963984540054 if alpha == 0.05 else \
-            float(jax.scipy.stats.norm.ppf(1 - alpha / 2))
+        from repro.inference.intervals import z_crit
         se = self.stderr
+        z = z_crit(alpha)
         return self.theta - z * se, self.theta + z * se
+
+    # -- uncertainty quantification (repro.inference) -------------------
+    def inference(self, *, method: Optional[str] = None,
+                  n_bootstrap: Optional[int] = None,
+                  executor: Optional[str] = None,
+                  alpha: Optional[float] = None):
+        """Replicate-based inference, computed lazily and cached.  The B
+        re-estimations run as ONE program through the configured
+        Executor (cfg.inference_executor); ``method`` overrides
+        cfg.inference (bootstrap | multiplier | jackknife).  The
+        replicates are alpha-independent, so alpha is NOT part of the
+        cache key — a new level re-quantiles the stored draws."""
+        from repro.inference import (delete_fold_jackknife, dml_bootstrap)
+        if self.fit_ctx is None:
+            raise ValueError("result carries no fit context; re-fit with "
+                             "DML.fit to enable replicate inference")
+        method = method or self.cfg.inference
+        if method in ("none", ""):
+            raise ValueError("cfg.inference='none'; pass method= to force")
+        n_boot = n_bootstrap or self.cfg.n_bootstrap
+        exe = executor or self.cfg.inference_executor
+        a = self.cfg.alpha if alpha is None else alpha
+        cache_key = (method, n_boot, exe)
+        if cache_key in self._inf_cache:
+            return self._inf_cache[cache_key]
+        ctx = self.fit_ctx
+        if method == "jackknife":
+            cf = self.crossfit
+            res = delete_fold_jackknife(
+                ctx.y, ctx.t, cf.oof_y, cf.oof_t, cf.folds, ctx.phi,
+                self.cfg.n_folds, alpha=a, executor=exe,
+                point=self.theta, point_se=self.stderr, rules=ctx.rules)
+        else:
+            scheme = "pairs" if method == "bootstrap" else method
+            res = dml_bootstrap(
+                ctx.nuis_y, ctx.nuis_t, n_folds=self.cfg.n_folds,
+                XW=ctx.XW, y=ctx.y, t=ctx.t, phi=ctx.phi,
+                key=jax.random.fold_in(ctx.key, 0x0b00), alpha=a,
+                n_replicates=n_boot, scheme=scheme, executor=exe,
+                point=self.theta, point_se=self.stderr, rules=ctx.rules)
+        self._inf_cache[cache_key] = res
+        return res
+
+    def ate_interval(self, alpha: Optional[float] = None,
+                     kind: str = "percentile") -> Tuple[float, float]:
+        """(lo, hi) CI for the ATE (theta[0] under the constant basis)
+        from cfg.n_bootstrap replicate re-estimations.  Falls back to
+        the analytic sandwich CI when cfg.inference == 'none'."""
+        a = self.cfg.alpha if alpha is None else alpha
+        if self.cfg.inference in ("none", "") or self.fit_ctx is None:
+            lo, hi = self.conf_int(a)
+            return float(lo[0]), float(hi[0])
+        return self.inference(alpha=a).ate_interval(a, kind)
+
+    def cate_interval(self, X: jax.Array, alpha: Optional[float] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+        """Pointwise (lo, hi) bands for theta(x) = <phi(x), theta>."""
+        from repro.inference.intervals import z_crit
+        a = self.cfg.alpha if alpha is None else alpha
+        phi = cate_basis(X, self.cfg.cate_features)
+        if self.cfg.inference in ("none", "") or self.fit_ctx is None:
+            z = z_crit(a)
+            se = jnp.sqrt(jnp.clip(jnp.einsum(
+                "ni,ij,nj->n", phi, self.cov, phi), 0.0, None))
+            c = phi @ self.theta
+            return c - z * se, c + z * se
+        return self.inference(alpha=a).cate_interval(phi, a)
 
     def summary(self) -> str:
         lo, hi = self.conf_int()
@@ -106,5 +193,9 @@ class DML:
         fs = fit_final_stage(y, t, cf.oof_y, cf.oof_t, phi)
         theta_at_x = phi @ fs.theta
         diag = compute_diagnostics(y, t, cf.oof_y, cf.oof_t, theta_at_x)
+        ctx = FitContext(y=y, t=t, XW=XW, phi=phi, key=key,
+                         nuis_y=self.nuis_y, nuis_t=self.nuis_t,
+                         rules=self.rules)
         return DMLResult(theta=fs.theta, cov=fs.cov, cfg=self.cfg,
-                         crossfit=cf, final=fs, diagnostics=diag)
+                         crossfit=cf, final=fs, diagnostics=diag,
+                         fit_ctx=ctx)

@@ -16,7 +16,7 @@ Consistent if EITHER the outcome models or the propensity is consistent
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,12 +33,77 @@ class DRResult:
     stderr: float
     theta: jax.Array          # CATE coefficients on phi(x)
     pseudo: jax.Array         # (n,) AIPW pseudo-outcomes
+    cfg: Optional[CausalConfig] = None
+    fit_ctx: Optional[Dict[str, Any]] = None
+    _inf_cache: Dict[Any, Any] = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     def cate(self, X: jax.Array, n_features: int) -> jax.Array:
         return cate_basis(X, n_features) @ self.theta
 
     def conf_int(self, z: float = 1.96):
         return self.ate - z * self.stderr, self.ate + z * self.stderr
+
+    # -- uncertainty quantification (repro.inference) -------------------
+    def inference(self, *, n_bootstrap: Optional[int] = None,
+                  executor: Optional[str] = None,
+                  alpha: Optional[float] = None,
+                  method: Optional[str] = None):
+        """Bootstrap the whole AIPW pipeline (nuisances + pseudo-outcome
+        regression) as one executor-dispatched program; cached (the B
+        re-estimations are alpha-independent, so alpha is NOT part of
+        the cache key — new levels re-quantile the stored draws)."""
+        from repro.inference import dr_bootstrap
+        if self.fit_ctx is None:
+            raise ValueError("result carries no fit context; re-fit with "
+                             "DRLearner.fit to enable replicate inference")
+        cfg = self.cfg or CausalConfig()
+        method = method or cfg.inference
+        if method in ("none", ""):
+            raise ValueError("cfg.inference='none'; pass method= to force")
+        if method == "jackknife":
+            method = "bootstrap"  # DR has no fold-state shortcut
+        scheme = "pairs" if method == "bootstrap" else method
+        n_boot = n_bootstrap or cfg.n_bootstrap
+        exe = executor or cfg.inference_executor
+        a = cfg.alpha if alpha is None else alpha
+        ck = (scheme, n_boot, exe)
+        if ck in self._inf_cache:
+            return self._inf_cache[ck]
+        ctx = self.fit_ctx
+        res = dr_bootstrap(
+            ctx["outcome"], ctx["propensity"], n_folds=cfg.n_folds,
+            X=ctx["X"], y=ctx["y"], t=ctx["t"], phi=ctx["phi"],
+            key=jax.random.fold_in(ctx["key"], 0x0b00), alpha=a,
+            n_replicates=n_boot, scheme=scheme, executor=exe,
+            clip=ctx["clip"], point=self.theta, ate_point=self.ate)
+        self._inf_cache[ck] = res
+        return res
+
+    def ate_interval(self, alpha: Optional[float] = None,
+                     kind: str = "percentile") -> Tuple[float, float]:
+        """CI for the AIPW ATE (= mean pseudo-outcome): bootstrap draws
+        of the same functional, or the analytic normal CI when
+        inference is disabled."""
+        from repro.inference.intervals import z_crit
+        cfg = self.cfg or CausalConfig()
+        a = cfg.alpha if alpha is None else alpha
+        if self.fit_ctx is None or cfg.inference in ("none", ""):
+            z = z_crit(a)
+            return self.ate - z * self.stderr, self.ate + z * self.stderr
+        return self.inference(alpha=a).ate_interval(a, kind)
+
+    def cate_interval(self, X: jax.Array, alpha: Optional[float] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg or CausalConfig()
+        if self.fit_ctx is None or cfg.inference in ("none", ""):
+            raise ValueError(
+                "cate_interval needs replicate inference (DRResult has "
+                "no coefficient covariance); set cfg.inference or call "
+                ".inference(method=...) explicitly")
+        a = cfg.alpha if alpha is None else alpha
+        phi = cate_basis(X, cfg.cate_features)
+        return self.inference(alpha=a).cate_interval(phi, a)
 
 
 class DRLearner:
@@ -99,4 +164,8 @@ class DRLearner:
         phi = cate_basis(X, self.cfg.cate_features)
         G = phi.T @ phi + 1e-8 * n * jnp.eye(phi.shape[1])
         theta = jnp.linalg.solve(G, phi.T @ psi)
-        return DRResult(ate=ate, stderr=se, theta=theta, pseudo=psi)
+        ctx = {"X": X, "y": y, "t": t, "phi": phi, "key": key,
+               "outcome": self.outcome, "propensity": self.propensity,
+               "clip": self.clip}
+        return DRResult(ate=ate, stderr=se, theta=theta, pseudo=psi,
+                        cfg=self.cfg, fit_ctx=ctx)

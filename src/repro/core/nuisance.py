@@ -33,6 +33,10 @@ class Nuisance:
     init(key, p)            -> state
     fit(state, X, y, w)     -> state      (w: (n,) sample weights)
     predict(state, X)       -> (n,)       (E[y|X] or P(t=1|X))
+
+    ``hyper`` exposes the scalar hyper-parameters baked into the
+    closures (lam, newton iters, ...) so repro.inference can rebuild the
+    same fit on its replicate-invariant fold-batched kernels.
     """
 
     name: str
@@ -40,6 +44,7 @@ class Nuisance:
     init: Callable[[jax.Array, int], Any]
     fit: Callable[[Any, jax.Array, jax.Array, jax.Array], Any]
     predict: Callable[[Any, jax.Array], jax.Array]
+    hyper: Optional[Dict[str, Any]] = None
 
 
 def _aug(X: jax.Array) -> jax.Array:
@@ -71,7 +76,8 @@ def make_ridge(lam: float = 1e-3) -> Nuisance:
     def predict(state, X):
         return _aug(X.astype(jnp.float32)) @ state["beta"]
 
-    return Nuisance("ridge", "reg", init, fit, predict)
+    return Nuisance("ridge", "reg", init, fit, predict,
+                    hyper={"lam": lam})
 
 
 # ---------------------------------------------------------------------------
@@ -104,7 +110,8 @@ def make_logistic(lam: float = 1e-3, iters: int = 16) -> Nuisance:
     def predict(state, X):
         return jax.nn.sigmoid(_aug(X.astype(jnp.float32)) @ state["beta"])
 
-    return Nuisance("logistic", "clf", init, fit, predict)
+    return Nuisance("logistic", "clf", init, fit, predict,
+                    hyper={"lam": lam, "iters": iters})
 
 
 # ---------------------------------------------------------------------------
@@ -167,7 +174,8 @@ def make_mlp(task: str, hidden: Tuple[int, ...] = (256, 256),
         out = _mlp_forward(state["params"], X, n_layers)
         return jax.nn.sigmoid(out) if task == "clf" else out
 
-    return Nuisance(f"mlp_{task}", task, init, fit, predict)
+    return Nuisance(f"mlp_{task}", task, init, fit, predict,
+                    hyper={"hidden": hidden, "steps": steps, "lr": lr})
 
 
 # ---------------------------------------------------------------------------

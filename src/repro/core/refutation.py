@@ -6,8 +6,21 @@ dowhy-style robustness checks re-run through the fold-parallel engine:
   data_subset            random half of rows -> estimate should be stable
 
 Each refuter is R independent re-fits — iterative steps of a causal
-algorithm, i.e. exactly the concurrency class the paper parallelizes;
-here each re-fit reuses the one-program crossfit engine.
+algorithm, i.e. exactly the concurrency class the paper parallelizes
+(§5.1 fold fits, §5.2 tuning trials, and these replicates).  The R
+re-fits are dispatched through ``repro.inference.executor`` — the same
+pluggable Executor that runs bootstrap replicates — so by default they
+execute as ONE vmapped program instead of a Python loop (pass
+``executor="serial"`` for the loop baseline; per-replicate estimates are
+bit-identical across the two).  Each replicate derives its permutation /
+noise / subset mask AND its fold assignment from ``fold_in(key, r)``,
+the lineage that makes any single replicate exactly replayable.
+
+``data_subset`` keeps rows in place and zeroes their training + moment
+weights (the weighted-fit path bootstrap replicates use), which is
+estimation-equivalent to physically dropping the rows but keeps every
+replicate the same shape — the requirement for batching them into one
+program.
 """
 from __future__ import annotations
 
@@ -19,6 +32,9 @@ import jax.numpy as jnp
 
 from repro.config import CausalConfig
 from repro.core.dml import DML
+from repro.core.final_stage import cate_basis
+from repro.inference.bootstrap import dml_theta_once, replicate_keys
+from repro.inference.executor import make_executor
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,53 +65,80 @@ class RefutationReport:
                 f"[{'PASS' if self.passed else 'FAIL'}]")
 
 
+def _run_replicates(est: DML, fn, key, n_reps: int, executor, y, t, X,
+                    phi) -> Tuple[float, ...]:
+    exe = make_executor(executor, rules=est.rules)
+    thetas = exe.map(fn, replicate_keys(key, n_reps), y, t, X, phi)["theta"]
+    return tuple(float(a) for a in thetas[:, 0])
+
+
 def placebo_treatment(est: DML, y, t, X, *, original_ate: float,
-                      n_reps: int = 3, key=None) -> RefutationReport:
+                      n_reps: int = 3, key=None,
+                      executor="vmap") -> RefutationReport:
     key = key if key is not None else jax.random.PRNGKey(7)
-    ates = []
-    for r in range(n_reps):
-        kr = jax.random.fold_in(key, r)
-        t_fake = jax.random.permutation(kr, t)
-        ates.append(est.fit(y, t_fake, X, key=kr).ate)
-    return RefutationReport("placebo_treatment", original_ate,
-                            tuple(ates), "zero")
+    phi = cate_basis(X, est.cfg.cate_features)
+
+    def refit(kr, y_, t_, X_, phi_):
+        t_fake = jax.random.permutation(kr, t_)
+        ones = jnp.ones((X_.shape[0],), jnp.float32)
+        return dml_theta_once(est.nuis_y, est.nuis_t, est.cfg.n_folds,
+                              X_, y_, t_fake, phi_, kr, ones,
+                              with_se=False)
+
+    ates = _run_replicates(est, refit, key, n_reps, executor, y, t, X, phi)
+    return RefutationReport("placebo_treatment", original_ate, ates, "zero")
 
 
 def random_common_cause(est: DML, y, t, X, *, original_ate: float,
-                        n_reps: int = 3, key=None) -> RefutationReport:
+                        n_reps: int = 3, key=None,
+                        executor="vmap") -> RefutationReport:
     key = key if key is not None else jax.random.PRNGKey(8)
-    ates = []
-    for r in range(n_reps):
-        kr = jax.random.fold_in(key, r)
-        extra = jax.random.normal(kr, (X.shape[0], 1), X.dtype)
-        ates.append(est.fit(y, t, jnp.concatenate([X, extra], 1), key=kr).ate)
-    return RefutationReport("random_common_cause", original_ate,
-                            tuple(ates), "stable")
+    phi = cate_basis(X, est.cfg.cate_features)
 
+    def refit(kr, y_, t_, X_, phi_):
+        n = X_.shape[0]
+        extra = jax.random.normal(kr, (n, 1), X_.dtype)
+        Xr = jnp.concatenate([X_, extra], axis=1)
+        ones = jnp.ones((n,), jnp.float32)
+        return dml_theta_once(est.nuis_y, est.nuis_t, est.cfg.n_folds,
+                              Xr, y_, t_, phi_, kr, ones, with_se=False)
 
-def data_subset(est: DML, y, t, X, *, original_ate: float,
-                frac: float = 0.5, n_reps: int = 3, key=None
-                ) -> RefutationReport:
-    key = key if key is not None else jax.random.PRNGKey(9)
-    n = X.shape[0]
-    m = int(n * frac)
-    ates = []
-    for r in range(n_reps):
-        kr = jax.random.fold_in(key, r)
-        idx = jax.random.permutation(kr, n)[:m]
-        ates.append(est.fit(y[idx], t[idx], X[idx], key=kr).ate)
-    return RefutationReport("data_subset", original_ate, tuple(ates),
+    ates = _run_replicates(est, refit, key, n_reps, executor, y, t, X, phi)
+    return RefutationReport("random_common_cause", original_ate, ates,
                             "stable")
 
 
-def run_all(cfg: CausalConfig, y, t, X, *, key=None
+def data_subset(est: DML, y, t, X, *, original_ate: float,
+                frac: float = 0.5, n_reps: int = 3, key=None,
+                executor="vmap") -> RefutationReport:
+    key = key if key is not None else jax.random.PRNGKey(9)
+    m = int(X.shape[0] * frac)
+    phi = cate_basis(X, est.cfg.cate_features)
+
+    def refit(kr, y_, t_, X_, phi_):
+        # weight-out (1-frac) of the rows instead of slicing them away:
+        # identical moments, static shapes (batchable)
+        n = X_.shape[0]
+        w = (jax.random.permutation(kr, jnp.arange(n)) < m
+             ).astype(jnp.float32)
+        return dml_theta_once(est.nuis_y, est.nuis_t, est.cfg.n_folds,
+                              X_, y_, t_, phi_, kr, w, with_se=False)
+
+    ates = _run_replicates(est, refit, key, n_reps, executor, y, t, X, phi)
+    return RefutationReport("data_subset", original_ate, ates, "stable")
+
+
+def run_all(cfg: CausalConfig, y, t, X, *, key=None, executor="vmap"
             ) -> Tuple[RefutationReport, ...]:
     key = key if key is not None else jax.random.PRNGKey(0)
     est = DML(cfg)
     base = est.fit(y, t, X, key=key)
     a0 = base.ate
     return (
-        placebo_treatment(est, y, t, X, original_ate=a0, key=key),
-        random_common_cause(est, y, t, X, original_ate=a0, key=key),
-        data_subset(est, y, t, X, original_ate=a0, key=key),
+        placebo_treatment(est, y, t, X, original_ate=a0, key=key,
+                          executor=executor),
+        random_common_cause(est, y, t, X, original_ate=a0, key=key,
+                            executor=executor),
+        data_subset(est, y, t, X, original_ate=a0, key=key,
+                    executor=executor),
     )

@@ -8,6 +8,14 @@ tasks.  For budgeted search, ``successive_halving`` implements the
 ASHA-style rung schedule on top (per-rung survivor sets are plain
 arrays, so a preempted sweep resumes from the last rung — DESIGN §7).
 
+The replicate axis (trials for the grid, folds inside a halving rung)
+is dispatched through ``repro.inference.executor`` — the same pluggable
+Executor that schedules §5.1 fold fits and bootstrap replicates — so
+"how iterative steps run" is one swappable choice across all three
+paper-parallelized step classes: ``vmap`` (default) batches the sweep
+into one program, ``serial`` is the Ray-less loop baseline, and
+``shard_map`` spreads the axis over the device mesh.
+
 Scores are out-of-fold (cross-validated) losses: MSE for regression,
 log-loss for classification — the same objective Ray Tune's scikit-learn
 wrappers report.
@@ -23,6 +31,7 @@ import jax.numpy as jnp
 from repro.config import CausalConfig
 from repro.core.crossfit import fold_ids, fold_weights, _oof_select
 from repro.core.nuisance import Nuisance, make_mlp, make_logistic, make_ridge
+from repro.inference.executor import make_executor
 
 
 def _oof_score(preds_kn: jax.Array, folds: jax.Array, target: jax.Array,
@@ -51,23 +60,30 @@ class TuneResult:
 
 def tune_penalty(task: str, lams: jax.Array, X: jax.Array, target: jax.Array,
                  *, n_folds: int = 5, key: Optional[jax.Array] = None,
-                 newton_iters: int = 16) -> TuneResult:
+                 newton_iters: int = 16, executor="vmap") -> TuneResult:
     key = key if key is not None else jax.random.PRNGKey(0)
     folds = fold_ids(key, X.shape[0], n_folds)
     W = fold_weights(folds, n_folds)
     make = make_logistic if task == "clf" else make_ridge
     proto = make(1.0) if task == "reg" else make(1.0, newton_iters)
+    exe = make_executor(executor)
 
-    def fit_one(lam, w):
-        st = proto.init(key, X.shape[1])
-        st = {**st, "lam": lam}
-        st = proto.fit(st, X, target, w)
-        return proto.predict(st, X)
+    # (T, K, n) predictions: the trial axis is the C2 population axis,
+    # dispatched through the executor (vmap => one double-batched
+    # program, exactly Ray Tune's trial pool as SPMD); folds stay
+    # vmapped inside each trial.  Data tensors ride as pass-through
+    # executor args (compiled-program inputs, not baked constants).
+    def trial(lam, X_, target_, W_, folds_):
+        st0 = proto.init(key, X_.shape[1])
 
-    # (T, K, n) predictions in one program: vmap over trials of vmap
-    # over folds — the C2 population axis.
-    preds = jax.vmap(lambda lam: jax.vmap(lambda w: fit_one(lam, w))(W))(lams)
-    scores = jax.vmap(lambda p: _oof_score(p, folds, target, task))(preds)
+        def one_fold(w):
+            st = proto.fit({**st0, "lam": lam}, X_, target_, w)
+            return proto.predict(st, X_)
+
+        preds = jax.vmap(one_fold)(W_)                      # (K, n)
+        return _oof_score(preds, folds_, target_, task)
+
+    scores = exe.map(trial, lams, X, target, W, folds)
     best = int(jnp.argmin(scores))
     return TuneResult(best_index=best, best_value=float(lams[best]),
                       best_score=float(scores[best]), scores=scores,
@@ -89,25 +105,30 @@ def successive_halving(task: str, lrs: jax.Array, X: jax.Array,
                        target: jax.Array, *, n_folds: int = 3,
                        base_steps: int = 25, eta: int = 2, rungs: int = 3,
                        hidden: Tuple[int, ...] = (64,),
-                       key: Optional[jax.Array] = None) -> HalvingResult:
+                       key: Optional[jax.Array] = None,
+                       executor="vmap") -> HalvingResult:
     key = key if key is not None else jax.random.PRNGKey(0)
     folds = fold_ids(key, X.shape[0], n_folds)
     W = fold_weights(folds, n_folds)
     survivors = jnp.arange(lrs.shape[0])
     history = []
     steps = base_steps
+    exe = make_executor(executor)
     for rung in range(rungs):
         cur = lrs[survivors]
         # lr is a python closure of make_mlp (it parameterizes the jitted
         # scan), so trials within a rung are a python loop of fits whose
-        # FOLD axis is vmapped — rung sizes shrink geometrically, so the
-        # loop is short; fold concurrency is where the batching pays.
+        # FOLD axis goes through the executor — rung sizes shrink
+        # geometrically, so the loop is short; fold concurrency is where
+        # the batching pays.
         scores = []
         for lr in cur.tolist():
             nz = make_mlp(task, hidden=hidden, steps=steps, lr=lr)
             st0 = nz.init(key, X.shape[1])
-            preds = jax.vmap(lambda w: nz.predict(nz.fit(st0, X, target, w),
-                                                  X))(W)
+            preds = exe.map(
+                lambda w, X_, tg, st: nz.predict(nz.fit(st, X_, tg, w),
+                                                 X_),
+                W, X, target, st0)
             scores.append(_oof_score(preds, folds, target, task))
         scores = jnp.stack(scores)
         order = jnp.argsort(scores)

@@ -80,6 +80,8 @@ def default_rules(*, fsdp: bool = True, sequence_parallel: bool = False,
         ("qk_lora", None),
         ("inner", "model"),    # mamba/rwkv expanded inner dim
         ("rows", dp),          # causal-data rows (DML engine)
+        ("replicate", dp),     # bootstrap/tuning replicate axis
+                               # (repro.inference ShardMapExecutor)
     ]
     return ShardingRules(rules=tuple(r))
 

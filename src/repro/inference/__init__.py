@@ -1,0 +1,17 @@
+# Distributed bootstrap inference — the third paper-parallelized step
+# class (after §5.1 cross-fitting and §5.2 tuning): EconML's
+# BootstrapInference runs B full re-estimations as Ray tasks; here the
+# B replicates are one batched SPMD program dispatched by a pluggable
+# Executor (serial | vmap | shard_map).
+#   executor.py   the Executor protocol + backends (the Ray-pool analogue)
+#   numerics.py   replicate-invariant weighted fits (serial == vmap bitwise)
+#   bootstrap.py  pairs + multiplier/Bayesian bootstrap over the executor
+#   jackknife.py  delete-fold jackknife from the existing fold states
+#   intervals.py  percentile / normal / studentized CIs, InferenceResult
+from repro.inference.executor import (Executor, SerialExecutor,  # noqa: F401
+    VmapExecutor, ShardMapExecutor, make_executor)
+from repro.inference.intervals import (InferenceResult,  # noqa: F401
+    percentile_interval, normal_interval, studentized_interval, z_crit)
+from repro.inference.bootstrap import (bootstrap_weights,  # noqa: F401
+    dml_theta_once, dml_bootstrap, dr_bootstrap)
+from repro.inference.jackknife import delete_fold_jackknife  # noqa: F401

@@ -1,0 +1,137 @@
+"""Confidence intervals from replicate draws + the InferenceResult
+container attached to estimator results.
+
+Three interval families over the (B, p_phi) replicate matrix:
+
+  percentile   plain empirical quantiles of the draws (EconML's
+               ``BootstrapInference`` default);
+  normal       point ± z_{1-α/2} · sd(draws);
+  studentized  bootstrap-t: quantiles of (θ*_b - θ̂)/se*_b rescaled by
+               the point estimate's influence-function stderr — second-
+               order accurate when per-replicate stderrs are available.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def z_crit(alpha: float) -> float:
+    """Two-sided normal critical value z_{1-α/2} (the single home for
+    the magic 1.96 — analytic and replicate CIs share it)."""
+    if alpha == 0.05:
+        return 1.959963984540054
+    return float(jax.scipy.stats.norm.ppf(1.0 - alpha / 2.0))
+
+
+def percentile_interval(replicates: jax.Array, alpha: float = 0.05
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """(B, ...) draws -> (lo, hi) empirical (α/2, 1-α/2) quantiles."""
+    lo = jnp.quantile(replicates, alpha / 2.0, axis=0)
+    hi = jnp.quantile(replicates, 1.0 - alpha / 2.0, axis=0)
+    return lo, hi
+
+
+def normal_interval(point: jax.Array, replicates: jax.Array,
+                    alpha: float = 0.05) -> Tuple[jax.Array, jax.Array]:
+    se = jnp.std(replicates, axis=0, ddof=1)
+    z = z_crit(alpha)
+    return point - z * se, point + z * se
+
+
+def studentized_interval(point: jax.Array, point_se: jax.Array,
+                         replicates: jax.Array, replicate_se: jax.Array,
+                         alpha: float = 0.05
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """Bootstrap-t: t*_b = (θ*_b - θ̂)/se*_b; CI is
+    [θ̂ - q_{1-α/2}(t*)·se(θ̂), θ̂ - q_{α/2}(t*)·se(θ̂)]."""
+    tstar = (replicates - point[None]) / jnp.maximum(replicate_se, 1e-12)
+    q_lo = jnp.quantile(tstar, alpha / 2.0, axis=0)
+    q_hi = jnp.quantile(tstar, 1.0 - alpha / 2.0, axis=0)
+    return point - q_hi * point_se, point - q_lo * point_se
+
+
+@dataclasses.dataclass(frozen=True)
+class InferenceResult:
+    """Uncertainty quantification for a (p_phi,) coefficient vector.
+
+    ``replicates`` holds the B re-estimated thetas (jackknife: the k
+    delete-fold thetas); ``se`` is the replicate-based stderr.  All CIs
+    for derived quantities (ATE = theta[0] with the constant basis, CATE
+    = phi(x)·theta) come from pushing each draw through the functional.
+    """
+
+    method: str                              # pairs|multiplier|jackknife
+    executor: str                            # serial|vmap|shard_map
+    point: jax.Array                         # (p_phi,)
+    replicates: jax.Array                    # (B, p_phi)
+    se: jax.Array                            # (p_phi,) replicate stderr
+    alpha: float = 0.05
+    point_se: Optional[jax.Array] = None     # (p_phi,) IF/sandwich stderr
+    replicate_se: Optional[jax.Array] = None  # (B, p_phi) for bootstrap-t
+    # estimators whose ATE is NOT theta[0] (DR: ATE = weighted mean of
+    # the pseudo-outcome) supply the ATE functional's own draws so
+    # ate_interval() centers on the quantity the result reports
+    ate_replicates: Optional[jax.Array] = None  # (B,)
+    ate_point: Optional[float] = None
+
+    @property
+    def n_replicates(self) -> int:
+        return int(self.replicates.shape[0])
+
+    def interval(self, alpha: Optional[float] = None,
+                 kind: str = "percentile") -> Tuple[jax.Array, jax.Array]:
+        a = self.alpha if alpha is None else alpha
+        if self.method == "jackknife" or kind == "normal":
+            # jackknife draws are k pseudo-values, far too few for
+            # quantiles — always use the normal interval with its se
+            z = z_crit(a)
+            return self.point - z * self.se, self.point + z * self.se
+        if kind == "percentile":
+            return percentile_interval(self.replicates, a)
+        if kind == "studentized":
+            if self.replicate_se is None or self.point_se is None:
+                raise ValueError("studentized CI needs per-replicate "
+                                 "stderrs (with_se=True)")
+            return studentized_interval(self.point, self.point_se,
+                                        self.replicates, self.replicate_se,
+                                        a)
+        raise ValueError(f"unknown interval kind {kind!r}")
+
+    def ate_interval(self, alpha: Optional[float] = None,
+                     kind: str = "percentile") -> Tuple[float, float]:
+        """CI for the ATE: theta[0] under the constant CATE basis, or
+        the dedicated ATE-functional draws when the estimator supplied
+        them (DR's pseudo-outcome mean)."""
+        a = self.alpha if alpha is None else alpha
+        if self.ate_replicates is not None:
+            draws = self.ate_replicates
+            if kind == "normal" or self.method == "jackknife":
+                center = (float(draws.mean()) if self.ate_point is None
+                          else self.ate_point)
+                z = z_crit(a)
+                se = float(jnp.std(draws, ddof=1))
+                return center - z * se, center + z * se
+            lo, hi = percentile_interval(draws, a)
+            return float(lo), float(hi)
+        lo, hi = self.interval(alpha, kind)
+        return float(lo[0]), float(hi[0])
+
+    def cate_interval(self, phi: jax.Array, alpha: Optional[float] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+        """Pointwise CI bands for phi @ theta.  phi: (n, p_phi) ->
+        ((n,), (n,)) lo/hi bands."""
+        a = self.alpha if alpha is None else alpha
+        draws = jnp.einsum("np,bp->bn", phi.astype(jnp.float32),
+                           self.replicates)
+        if self.method == "jackknife":
+            z = z_crit(a)
+            center = phi.astype(jnp.float32) @ self.point
+            k = draws.shape[0]
+            dev = jnp.sqrt(jnp.clip((k - 1.0) / k * jnp.square(
+                draws - draws.mean(0, keepdims=True)).sum(0), 0.0, None))
+            return center - z * dev, center + z * dev
+        return percentile_interval(draws, a)

@@ -1,0 +1,57 @@
+"""Delete-fold jackknife — uncertainty almost for free.
+
+Cross-fitting already partitions the rows into k folds and computes
+out-of-fold nuisance predictions for every row.  The delete-group
+jackknife re-solves only the (tiny) final stage k times, dropping one
+fold of rows each time — no nuisance refits, so the marginal cost is
+k extra (p_phi, p_phi) solves on top of a finished DML fit.  This is the
+cheap end of the inference spectrum (bootstrap being the expensive end),
+and the k delete-fold thetas go through the same Executor as bootstrap
+replicates.
+
+Variance: the delete-group jackknife estimator with k groups,
+
+    se² = (k-1)/k · Σ_j (θ_(-j) - θ̄)²,
+
+is a consistent estimate of the same asymptotic variance the influence-
+function (HC0 sandwich) stderr targets — tests assert agreement.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.inference.executor import make_executor
+from repro.inference.intervals import InferenceResult
+from repro.inference.numerics import weighted_theta
+
+
+def delete_fold_jackknife(y: jax.Array, t: jax.Array, oof_y: jax.Array,
+                          oof_t: jax.Array, folds: jax.Array,
+                          phi: jax.Array, n_folds: int, *,
+                          alpha: float = 0.05, executor="vmap",
+                          point=None, point_se=None,
+                          mesh=None, rules=None) -> InferenceResult:
+    """Jackknife over the existing fold partition.  y, t: (n,);
+    oof_y/oof_t: (n,) out-of-fold nuisance predictions from the fit;
+    folds: (n,) fold ids."""
+    exe = make_executor(executor, mesh=mesh, rules=rules)
+    ry = y.astype(jnp.float32) - oof_y
+    rt = t.astype(jnp.float32) - oof_t
+
+    def drop_fold(j, ry_, rt_, phi_, folds_):
+        w = (folds_ != j).astype(jnp.float32)
+        theta, _ = weighted_theta(ry_, rt_, phi_, w, with_se=False)
+        return theta
+
+    thetas = exe.map(drop_fold, jnp.arange(n_folds, dtype=jnp.int32),
+                     ry, rt, phi, folds)
+    theta_bar = thetas.mean(axis=0)
+    center = theta_bar if point is None else point
+    k = float(n_folds)
+    se = jnp.sqrt(jnp.clip(
+        (k - 1.0) / k * jnp.square(thetas - theta_bar[None, :]).sum(axis=0),
+        0.0, None))
+    return InferenceResult(method="jackknife", executor=exe.name,
+                           point=center, replicates=thetas, se=se,
+                           alpha=alpha, point_se=point_se)

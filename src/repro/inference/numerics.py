@@ -1,0 +1,171 @@
+"""Replicate-invariant weighted estimation kernels.
+
+The Executor contract promises that ``serial`` and ``vmap`` backends
+produce *bit-identical* per-replicate estimates.  XLA does not give that
+for free: LAPACK solves (``jnp.linalg.solve``, Cholesky) and mat-vec
+einsums change their reduction order when a leading batch dimension is
+added, so a vmapped replicate differs from the same replicate run alone
+by a few ulps.  Empirically (see tests/test_inference.py) the operations
+that ARE invariant under an added batch axis:
+
+  * gram-shaped einsums with explicit fold index: ``ni,kn,nj->kij`` and
+    ``kp,np->kn`` — XLA loops the batch over the same per-matrix
+    contraction (the thinner ``kn,np->kp`` is NOT safe once XLA fuses an
+    elementwise producer into it, so gradients are read off augmented
+    Grams instead);
+  * elementwise ops, plain sums, ``fold_in``/``permutation`` PRNG;
+  * Gauss-Jordan elimination written as broadcast updates (fori_loop of
+    rank-1 outer products) — no LAPACK, no pivot-order ambiguity.
+
+Every function here is built ONLY from that vocabulary.  The mat-vec
+RHS of the normal equations is folded into an *augmented* Gram (append
+the target as an extra column of X), so the one bad shape class —
+``ni,n->i`` — never appears.  Gauss-Jordan without pivoting is safe
+because every system we solve is SPD plus an explicit ridge.
+
+These kernels double as the weighted-fit path for bootstrap replicates:
+``Wk`` carries fold-complement masks multiplied by per-row bootstrap
+weights, the same mechanism ``crossfit.fold_weights`` uses for C1.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def det_solve(A: jax.Array, b: jax.Array) -> jax.Array:
+    """Deterministic (p,p) @ x = (p,) solve via Gauss-Jordan without
+    pivoting.  Elementwise broadcast updates only — bit-identical under
+    any number of leading vmap axes.  Requires A SPD-ish (ridge added by
+    every caller)."""
+    M = jnp.concatenate([A, b[:, None]], axis=1)
+
+    def elim(i, M):
+        piv = M[i] / M[i, i]
+        factors = M[:, i].at[i].set(0.0)
+        M = M - factors[:, None] * piv[None, :]
+        return M.at[i].set(piv)
+
+    M = jax.lax.fori_loop(0, A.shape[0], elim, M)
+    return M[:, -1]
+
+
+def det_inv(A: jax.Array) -> jax.Array:
+    """Gauss-Jordan inverse (same invariance properties as det_solve)."""
+    p = A.shape[0]
+    M = jnp.concatenate([A, jnp.eye(p, dtype=A.dtype)], axis=1)
+
+    def elim(i, M):
+        piv = M[i] / M[i, i]
+        factors = M[:, i].at[i].set(0.0)
+        M = M - factors[:, None] * piv[None, :]
+        return M.at[i].set(piv)
+
+    M = jax.lax.fori_loop(0, p, elim, M)
+    return M[:, p:]
+
+
+def _aug(X: jax.Array) -> jax.Array:
+    return jnp.concatenate([X, jnp.ones((X.shape[0], 1), X.dtype)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Fold-batched weighted nuisance fits.  Wk is (k, n): fold-complement
+# mask times per-row replicate weights.  All einsums carry the fold
+# index explicitly — vmap-of-gram ("ni,n,nj->ij" under vmap) is NOT
+# batch-invariant, the explicit "ni,kn,nj->kij" form is.
+# ---------------------------------------------------------------------------
+
+def ridge_fit_folds_w(lam: jax.Array, X: jax.Array, y: jax.Array,
+                      Wk: jax.Array) -> jax.Array:
+    """Weighted per-fold ridge, one augmented Gram.  Returns beta (k, p+1)
+    (intercept last, matching nuisance.make_ridge's column order)."""
+    f32 = jnp.float32
+    Xa = _aug(X.astype(f32))
+    p = Xa.shape[1]
+    Z = jnp.concatenate([Xa, y.astype(f32)[:, None]], axis=1)   # (n, p+1)
+    Wk = Wk.astype(f32)
+    Gaug = jnp.einsum("ni,kn,nj->kij", Z, Wk, Z)                # (k,p+1,p+1)
+    n_eff = jnp.maximum(Wk.sum(axis=1), 1.0)                    # (k,)
+    A = Gaug[:, :p, :p] / n_eff[:, None, None] \
+        + lam * jnp.eye(p, dtype=f32)[None]
+    b = Gaug[:, :p, p] / n_eff[:, None]
+    return jax.vmap(det_solve)(A, b)
+
+
+def logistic_fit_folds_w(lam: jax.Array, iters: int, X: jax.Array,
+                         t: jax.Array, Wk: jax.Array) -> jax.Array:
+    """Weighted per-fold Newton/IRLS logistic (same math as
+    nuisance.make_logistic, fold axis explicit).  Returns beta (k, p+1)."""
+    f32 = jnp.float32
+    Xa = _aug(X.astype(f32))
+    k, p = Wk.shape[0], Xa.shape[1]
+    Wk = Wk.astype(f32)
+    tt = t.astype(f32)
+    n_eff = jnp.maximum(Wk.sum(axis=1), 1.0)                    # (k,)
+    lam_eye = lam * jnp.eye(p, dtype=f32)
+    # the gradient mat-vec Σ_n r_kn·Xa_n is read off an augmented Gram
+    # (ones column appended): the 2-operand "kn,np->kp" einsum changes
+    # its reduction order when XLA fuses the elementwise residual into
+    # it under vmap, the 3-operand Gram form does not
+    Za = jnp.concatenate([Xa, jnp.ones((Xa.shape[0], 1), f32)], axis=1)
+
+    def newton(_, beta):                                        # beta (k, p)
+        z = jnp.einsum("kp,np->kn", beta, Xa)
+        mu = jax.nn.sigmoid(z)
+        s = jnp.clip(mu * (1.0 - mu), 1e-6, None) * Wk
+        Gr = jnp.einsum("ni,kn,nj->kij", Za, Wk * (mu - tt[None, :]), Za)
+        g = Gr[:, :p, p] / n_eff[:, None] + lam * beta
+        H = jnp.einsum("ni,kn,nj->kij", Xa, s, Xa) \
+            / n_eff[:, None, None] + lam_eye[None]
+        return beta - jax.vmap(det_solve)(H, g)
+
+    beta = jax.lax.fori_loop(0, iters, newton, jnp.zeros((k, p), f32))
+    return beta
+
+
+def predict_folds_linear(beta: jax.Array, X: jax.Array) -> jax.Array:
+    """(k, p+1) coefficients -> (k, n) linear predictions."""
+    return jnp.einsum("kp,np->kn", beta, _aug(X.astype(jnp.float32)))
+
+
+def predict_folds_logistic(beta: jax.Array, X: jax.Array) -> jax.Array:
+    return jax.nn.sigmoid(predict_folds_linear(beta, X))
+
+
+# ---------------------------------------------------------------------------
+# Weighted orthogonal final stage (weighted analogue of
+# final_stage.fit_final_stage, replicate-invariant form).
+# ---------------------------------------------------------------------------
+
+def weighted_theta(ry: jax.Array, rt: jax.Array, phi: jax.Array,
+                   w: jax.Array, *, ridge: float = 1e-8,
+                   with_se: bool = True
+                   ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Solve the weighted orthogonal moment
+    ``theta = argmin Σ w_i (ry_i - <theta, phi_i> rt_i)²`` and (optionally)
+    its weighted HC0 sandwich stderr.  ry, rt, w: (n,); phi: (n, p_phi)."""
+    f32 = jnp.float32
+    ry = ry.astype(f32)
+    rt = rt.astype(f32)
+    w = w.astype(f32)
+    phi = phi.astype(f32)
+    p = phi.shape[1]
+    Z = rt[:, None] * phi
+    M = jnp.concatenate([Z, ry[:, None]], axis=1)               # (n, p+1)
+    Gaug = jnp.einsum("ni,n,nj->ij", M, w, M)
+    n_eff = jnp.maximum(w.sum(), 1.0)
+    A = Gaug[:p, :p] + ridge * n_eff * jnp.eye(p, dtype=f32)
+    theta = det_solve(A, Gaug[:p, p])
+    if not with_se:
+        return theta, None
+    # weighted HC0: cov = A⁻¹ (Zᵀ diag(w² e²) Z) A⁻¹ — elementwise resid
+    # (no mat-vec: (Z * theta).sum over the tiny p_phi axis is invariant)
+    e = ry - (Z * theta[None, :]).sum(axis=1)
+    meat = jnp.einsum("ni,n,nj->ij", Z, jnp.square(w * e), Z)
+    Ainv = det_inv(A)
+    cov = jnp.einsum("ia,ab,bj->ij", Ainv, meat, Ainv)
+    se = jnp.sqrt(jnp.clip(jnp.diagonal(cov), 0.0, None))
+    return theta, se

@@ -227,9 +227,23 @@ def _collective_wire(op: Op, comp: Computation, world: int
 _SLICE_OPS = {"dynamic-slice", "slice", "gather"}
 
 
-def _sliced_param_sizes(callee: Computation) -> Dict[int, float]:
+def _sliced_param_sizes(callee: Computation,
+                        comps: Optional[Dict[str, Computation]] = None,
+                        _memo: Optional[Dict[str, Dict[int, float]]] = None,
+                        _stack: Tuple[str, ...] = ()) -> Dict[int, float]:
     """Parameter indices of ``callee`` whose ONLY consumers are slice-type
-    ops, mapped to the total bytes those slices actually read."""
+    ops, mapped to the total bytes those slices actually read.  The
+    exemption propagates through nested fusion/call boundaries (XLA's
+    CPU backend wraps fusions in ``parallel_*`` call computations for
+    thread-level parallelism; the stack operand is still only sliced,
+    one level down)."""
+    comps = comps or {}
+    if _memo is None:
+        _memo = {}
+    if callee.name in _memo:
+        return _memo[callee.name]
+    if callee.name in _stack:  # malformed recursion guard
+        return {}
     params: Dict[str, int] = {}
     for op in callee.ops:
         if op.opcode == "parameter":
@@ -246,9 +260,30 @@ def _sliced_param_sizes(callee: Computation) -> Dict[int, float]:
                 consumers[nm].append(op)
     for nm, idx in params.items():
         cons = consumers[nm]
-        if cons and all(c.opcode in _SLICE_OPS and
-                        _operand_names(c.line)[0] == nm for c in cons):
-            out[idx] = sum(_size_bytes(c.out_type) for c in cons)
+        if not cons:
+            continue
+        total = 0.0
+        exempt = True
+        for c in cons:
+            if c.opcode in _SLICE_OPS and _operand_names(c.line)[0] == nm:
+                total += _size_bytes(c.out_type)
+                continue
+            if c.opcode in ("fusion", "call"):
+                m = _CALLS_RE.search(c.line)
+                sub = comps.get(m.group(1)) if m else None
+                if sub is not None:
+                    sub_sliced = _sliced_param_sizes(
+                        sub, comps, _memo, _stack + (callee.name,))
+                    pos = [i for i, on in enumerate(_operand_names(c.line))
+                           if on == nm]
+                    if pos and all(p in sub_sliced for p in pos):
+                        total += sum(sub_sliced[p] for p in pos)
+                        continue
+            exempt = False
+            break
+        if exempt:
+            out[idx] = total
+    _memo[callee.name] = out
     return out
 
 
@@ -334,7 +369,7 @@ def _comp_cost(comp: Computation, comps: Dict[str, Computation],
             #    the naive rule billed 2 x 232 GiB/step on yi decode for
             #    a 3.9 GiB cache written in place)
             call_args = _operand_names(op.line)
-            sliced = _sliced_param_sizes(callee) if callee else {}
+            sliced = _sliced_param_sizes(callee, comps) if callee else {}
             dus_free, dus_update = _dus_root(callee)
             if dus_update is not None:
                 by += 2 * dus_update
