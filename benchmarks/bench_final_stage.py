@@ -1,0 +1,68 @@
+"""Chunked vs whole-array final stage: the memory/runtime trade of the
+streaming moments engine (repro.core.moments) on the DML final-stage
+hot spot.
+
+The whole-array path materializes the dense (n, p_phi) moment matrix
+Z = rt ⊙ phi (plus its HC0 meat pass); the chunked path lax.scans row
+blocks so peak temporaries are O(row_block · p_phi).  On one host the
+interesting number is the runtime cost of streaming (it buys bounded
+memory, not speed); the peak-temp claim itself is asserted by
+tests/test_moments.py against the post-optimization HLO.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.final_stage import cate_basis, fit_final_stage
+from repro.data.causal_dgp import make_causal_data
+
+
+def _time(fn, reps=3):
+    fn()  # warm-up/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(n=100_000, p=20, p_phi=4, row_block=4096, csv=print):
+    key = jax.random.PRNGKey(0)
+    d = make_causal_data(key, n, p, effect=1.0)
+    my = 0.1 * d.y
+    mt = jnp.full((n,), 0.5, jnp.float32)
+    phi = cate_basis(d.X, p_phi)
+
+    jitted = {rb: jax.jit(lambda y, t, m1, m2, ph, rb=rb: fit_final_stage(
+        y, t, m1, m2, ph, row_block=rb).theta)
+        for rb in (0, row_block)}
+
+    def timed(rb):
+        def f():
+            jax.block_until_ready(jitted[rb](d.y, d.t, my, mt, phi))
+        return _time(f)
+
+    t_whole = timed(0)
+    t_chunk = timed(row_block)
+    csv(f"final_stage_whole_n{n}_pphi{p_phi},{t_whole*1e6:.0f},baseline")
+    csv(f"final_stage_chunked_n{n}_pphi{p_phi}_rb{row_block},"
+        f"{t_chunk*1e6:.0f},ratio={t_chunk/max(t_whole, 1e-12):.2f}x")
+    return [(n, t_whole, t_chunk)]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale n=1M x p_phi=4")
+    args = ap.parse_args(argv)
+    if args.full:
+        run(n=1_000_000, p=50, p_phi=4, row_block=8192)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,43 +1,108 @@
 """Benchmark aggregator: one section per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV lines."""
+Prints ``name,us_per_call,derived`` CSV lines AND writes a
+standardized ``BENCH_results.json`` (override with --json) so the
+bench trajectory is machine-readable across PRs:
+
+    {"meta": {...}, "entries": [
+        {"name": ..., "us_per_call": ..., "derived": ...}, ...]}
+"""
 from __future__ import annotations
 
 import argparse
+import json
+import platform
+import time
+
+
+class Recorder:
+    """print-compatible sink that also parses the CSV lines into
+    standardized JSON entries."""
+
+    def __init__(self):
+        self.entries = []
+
+    def __call__(self, line: str):
+        print(line)
+        if not line or line.startswith("#"):
+            return
+        parts = line.split(",", 2)
+        if len(parts) < 2:
+            return
+        try:
+            us = float(parts[1])
+        except ValueError:
+            return
+        self.entries.append({
+            "name": parts[0],
+            "us_per_call": us,
+            "derived": parts[2] if len(parts) > 2 else "",
+        })
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-exact scales (1M x 500; slow on CPU)")
+    ap.add_argument("--json", default="BENCH_results.json",
+                    help="output path for the standardized bench JSON "
+                         "('' disables)")
     args = ap.parse_args(argv)
 
+    rec = Recorder()
+    t0 = time.time()
     print("name,us_per_call,derived")
 
     print("# --- paper Fig. 6: DML vs DML_Ray crossfit runtime ---")
     from benchmarks import bench_crossfit
     if args.full:
-        bench_crossfit.run(sizes=(10_000, 100_000, 1_000_000), p=500)
+        bench_crossfit.run(sizes=(10_000, 100_000, 1_000_000), p=500,
+                           csv=rec)
     else:
-        bench_crossfit.run(sizes=(10_000, 30_000, 100_000), p=50)
+        bench_crossfit.run(sizes=(10_000, 30_000, 100_000), p=50, csv=rec)
 
     print("# --- paper Fig. 5 / 5.2: distributed tuning ---")
     from benchmarks import bench_tuning
-    bench_tuning.run(n=20_000, p=50, n_trials=8, n_folds=5)
+    bench_tuning.run(n=20_000, p=50, n_trials=8, n_folds=5, csv=rec)
 
     print("# --- bootstrap inference: serial vs batched executor ---")
     from benchmarks import bench_inference
     if args.full:
-        bench_inference.run(sizes=(10_000, 100_000), p=500, B=200)
+        bench_inference.run(sizes=(10_000, 100_000), p=500, B=200, csv=rec)
     else:
-        bench_inference.run(sizes=(5_000, 10_000), p=20, B=32)
+        bench_inference.run(sizes=(5_000, 10_000), p=20, B=32, csv=rec)
+
+    print("# --- streaming moments: chunked vs whole final stage ---")
+    from benchmarks import bench_final_stage
+    if args.full:
+        bench_final_stage.run(n=1_000_000, p=50, p_phi=4, row_block=8192,
+                              csv=rec)
+    else:
+        bench_final_stage.run(csv=rec)
 
     print("# --- kernel micro-benchmarks ---")
     from benchmarks import bench_kernels
-    bench_kernels.main()
+    bench_kernels.main(csv=rec)
 
     print("# --- multi-pod dry-run roofline (deliverable e/g) ---")
     from benchmarks import bench_dryrun
-    bench_dryrun.main([])
+    bench_dryrun.main([], csv=rec)
+
+    if args.json:
+        import jax
+        payload = {
+            "meta": {
+                "schema": "bench-v1",
+                "unix_time": int(t0),
+                "wall_seconds": round(time.time() - t0, 1),
+                "full": bool(args.full),
+                "backend": jax.default_backend(),
+                "platform": platform.platform(),
+            },
+            "entries": rec.entries,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {len(rec.entries)} entries -> {args.json}")
 
 
 if __name__ == "__main__":

@@ -237,6 +237,14 @@ class CausalConfig:
     cate_features: int = 1  # phi(x) dims (1 => ATE-only / constant effect)
     ridge_lambda: float = 1e-3
     newton_iters: int = 16
+    # --- streaming sufficient statistics (repro.core.moments) ---
+    # 0 = whole-array moments (legacy einsum forms, one allocation);
+    # R > 0 = lax.scan over row blocks of R — peak activation memory
+    # drops from O(n·p) to O(R·p), so n can exceed a single allocation.
+    # Chunked and whole evaluation of the SAME row_block are
+    # bit-identical (see core/moments.py); different settings agree to
+    # float reassociation only.
+    row_block: int = 0
     mlp_hidden: Tuple[int, ...] = (256, 256)
     mlp_steps: int = 200
     mlp_lr: float = 1e-3

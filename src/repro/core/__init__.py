@@ -1,4 +1,7 @@
 # The paper's primary contribution: distributed Double-ML.
+#   moments.py      streaming sufficient-statistics engine (the single
+#                   estimation substrate: whole-array or row-chunked,
+#                   bit-identical by construction)
 #   crossfit.py     C1 fold-parallel cross-fitting (+ sequential baseline)
 #   tuning.py       C2 population-axis hyper-parameter search
 #   dml.py          the estimator facade (DML / DML_Ray translation)
@@ -9,6 +12,7 @@
 # Uncertainty quantification (bootstrap/jackknife CIs) lives in
 # repro.inference; tuning + refutation replicate loops dispatch through
 # its Executor.
+from repro.core import moments  # noqa: F401
 from repro.core.dml import DML, DMLResult  # noqa: F401
 from repro.core.crossfit import (crossfit, crossfit_parallel,  # noqa: F401
     crossfit_parallel_loo, crossfit_sequential)

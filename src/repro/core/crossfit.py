@@ -3,11 +3,19 @@
 EconML runs the K out-of-fold nuisance fits as a sequential loop (or
 joblib threads); the paper's DML_Ray turns each fold into a Ray task.
 On a TPU pod the equivalent concurrency is *SPMD batching*: the K fits
-are stacked on a leading fold axis and vmapped into one compiled
+are stacked on a leading fold axis and batched into one compiled
 program — every fold trains simultaneously, sharing each row's bandwidth
 (fold masks select the complement), with GSPMD sharding rows over the
-``data`` mesh axis.  ``crossfit_sequential`` keeps the EconML-style loop
-as the runtime baseline for benchmarks/bench_crossfit (paper Fig. 6).
+``data`` mesh axis.
+
+"How the K fold fits run" is dispatched through the same ``Executor``
+protocol (repro.inference.executor) that schedules tuning trials and
+bootstrap replicates — ONE swappable knob for every paper-parallelized
+step class.  ``engine="parallel"`` maps the fold axis through the
+``vmap`` executor (the Ray-task-pool translation); ``"sequential"``
+maps it through ``serial`` — the EconML-style baseline for
+benchmarks/bench_crossfit (paper Fig. 6) — with no bespoke Python loop
+of its own.
 
 Determinism: fold assignment and per-fold init keys derive from one base
 key — the lineage that makes checkpoint-restart replay exact (DESIGN §7).
@@ -15,6 +23,7 @@ key — the lineage that makes checkpoint-restart replay exact (DESIGN §7).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Optional, Tuple
 
 import jax
@@ -43,37 +52,66 @@ def _oof_select(preds_kn: jax.Array, folds: jax.Array) -> jax.Array:
     return jnp.take_along_axis(preds_kn, folds[None, :], axis=0)[0]
 
 
-def crossfit_parallel(nuis: Nuisance, key: jax.Array, X: jax.Array,
-                      target: jax.Array, folds: jax.Array, k: int,
-                      rules=None) -> Tuple[jax.Array, Any]:
-    """C1: all K fold-fits in ONE batched program (the Ray-tasks
-    translation).  Returns (out-of-fold predictions (n,), states)."""
-    p = X.shape[1]
-    keys = jax.random.split(key, k)
-    states0 = jax.vmap(nuis.init, in_axes=(0, None))(keys, p)
+@functools.lru_cache(maxsize=128)
+def _fold_fit_fn(nuis: Nuisance):
+    """The per-fold fit closure mapped by the Executor.  Cached per
+    Nuisance so repeated crossfit calls hand the SAME closure object to
+    the executor — its compiled-program cache is keyed on it (a fresh
+    lambda per call would re-trace every fit)."""
+
+    def fold_fit(xs, X, target):
+        st = nuis.fit(nuis.init(xs["key"], X.shape[1]), X, target,
+                      xs["w"])
+        return nuis.predict(st, X), st
+
+    return fold_fit
+
+
+def _crossfit_engine(nuis: Nuisance, keys: jax.Array, X: jax.Array,
+                     target: jax.Array, folds: jax.Array, k: int,
+                     rules, executor) -> Tuple[jax.Array, Any]:
+    """The shared fold-fit dispatch: the fold axis (init keys + fold-
+    complement weights) maps through an Executor, so fold fits, tuning
+    trials, and bootstrap replicates all run through one "how iterative
+    steps run" knob."""
+    from repro.inference.executor import make_executor
+    exe = make_executor(executor, rules=rules)
     W = fold_weights(folds, k)                      # (k, n)
-    states = jax.vmap(nuis.fit, in_axes=(0, None, None, 0))(
-        states0, X, target, W)
-    preds = jax.vmap(nuis.predict, in_axes=(0, None))(states, X)  # (k, n)
+    preds, states = exe.map(_fold_fit_fn(nuis), {"key": keys, "w": W},
+                            X, target)
     preds = constrain(preds, ("fold", "batch"), rules)
     return _oof_select(preds, folds), states
+
+
+def crossfit_parallel(nuis: Nuisance, key: jax.Array, X: jax.Array,
+                      target: jax.Array, folds: jax.Array, k: int,
+                      rules=None, executor="vmap") -> Tuple[jax.Array, Any]:
+    """C1: all K fold-fits in ONE batched program (the Ray-tasks
+    translation).  Returns (out-of-fold predictions (n,), states)."""
+    keys = jax.random.split(key, k)
+    return _crossfit_engine(nuis, keys, X, target, folds, k, rules,
+                            executor)
 
 
 def crossfit_parallel_loo(nuis: Nuisance, key: jax.Array, X: jax.Array,
                           target: jax.Array, folds: jax.Array, k: int,
                           rules=None, mm_iters: int = 32):
     """C1+ (beyond-paper, EXPERIMENTS §Perf): the leave-one-out Gram
-    identity collapses the K complement fits to ONE pass over X.  Exact
-    for ridge; fixed-majorizer MM for logistic (same optimum).  Falls
-    back to the vmap engine for non-linear nuisances."""
+    identity collapses the K complement fits to ONE fold-segmented
+    moments pass over X (row-blocked when the nuisance carries a
+    ``row_block`` hyper).  Exact for ridge; fixed-majorizer MM for
+    logistic (same optimum).  Falls back to the vmap engine for
+    non-linear nuisances."""
     from repro.core.nuisance import logistic_fit_folds, ridge_fit_folds
     p = X.shape[1]
     lam = (nuis.init(key, p)["lam"]
            if nuis.name in ("ridge", "logistic") else 0.0)
+    rb = (nuis.hyper or {}).get("row_block", 0)
     if nuis.name == "ridge":
-        states = ridge_fit_folds(lam, X, target, folds, k)
+        states = ridge_fit_folds(lam, X, target, folds, k, row_block=rb)
     elif nuis.name == "logistic":
-        states = logistic_fit_folds(lam, mm_iters, X, target, folds, k)
+        states = logistic_fit_folds(lam, mm_iters, X, target, folds, k,
+                                    row_block=rb)
     else:
         return crossfit_parallel(nuis, key, X, target, folds, k, rules)
     preds = jax.vmap(nuis.predict, in_axes=(0, None))(states, X)
@@ -83,22 +121,16 @@ def crossfit_parallel_loo(nuis: Nuisance, key: jax.Array, X: jax.Array,
 
 def crossfit_sequential(nuis: Nuisance, key: jax.Array, X: jax.Array,
                         target: jax.Array, folds: jax.Array, k: int
-                        ) -> Tuple[jax.Array, list]:
-    """EconML-style baseline: one fit per fold, strictly in sequence
-    (each fold is its own compiled program, like one Ray-less worker)."""
-    n = X.shape[0]
-    W = fold_weights(folds, k)
-    oof = jnp.zeros((n,), jnp.float32)
-    states = []
-    fit = jax.jit(nuis.fit)
-    predict = jax.jit(nuis.predict)
-    for j in range(k):
-        st = fit(nuis.init(jax.random.fold_in(key, j), X.shape[1]),
-                 X, target, W[j])
-        pj = predict(st, X)
-        oof = jnp.where(folds == j, pj, oof)
-        states.append(st)
-    return oof, states
+                        ) -> Tuple[jax.Array, Any]:
+    """EconML-style baseline: one fit per fold, strictly in sequence —
+    the ``serial`` Executor (one compiled program per fold, like K
+    Ray-less workers); the bespoke Python loop this function used to
+    carry is gone.  Per-fold init keys keep the legacy
+    ``fold_in(key, j)`` lineage."""
+    keys = jax.vmap(lambda j: jax.random.fold_in(key, j))(
+        jnp.arange(k, dtype=jnp.uint32))
+    return _crossfit_engine(nuis, keys, X, target, folds, k, None,
+                            "serial")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,20 +145,24 @@ class CrossfitResult:
 def crossfit(nuis_y: Nuisance, nuis_t: Nuisance, key: jax.Array,
              X: jax.Array, y: jax.Array, t: jax.Array, k: int,
              engine: str = "parallel", rules=None) -> CrossfitResult:
-    """Cross-fit both nuisances.  engine: "parallel" (paper) runs the
-    2·K fits concurrently; "sequential" (EconML baseline) loops."""
+    """Cross-fit both nuisances.  engine: "parallel" (paper) dispatches
+    the 2·K fits through the ``vmap`` Executor; "sequential" (EconML
+    baseline) through ``serial``; "parallel_loo" takes the one-pass
+    LOO-Gram fast path.  Any other executor name (e.g. "shard_map") or
+    Executor instance maps the fold axis directly."""
     kf, ky, kt = jax.random.split(key, 3)
     folds = fold_ids(kf, X.shape[0], k)
-    if engine == "parallel":
-        oof_y, st_y = crossfit_parallel(nuis_y, ky, X, y, folds, k, rules)
-        oof_t, st_t = crossfit_parallel(nuis_t, kt, X, t, folds, k, rules)
-    elif engine == "parallel_loo":
+    if engine == "parallel_loo":
         oof_y, st_y = crossfit_parallel_loo(nuis_y, ky, X, y, folds, k, rules)
         oof_t, st_t = crossfit_parallel_loo(nuis_t, kt, X, t, folds, k, rules)
     elif engine == "sequential":
         oof_y, st_y = crossfit_sequential(nuis_y, ky, X, y, folds, k)
         oof_t, st_t = crossfit_sequential(nuis_t, kt, X, t, folds, k)
     else:
-        raise ValueError(engine)
+        exe = "vmap" if engine == "parallel" else engine
+        oof_y, st_y = crossfit_parallel(nuis_y, ky, X, y, folds, k, rules,
+                                        executor=exe)
+        oof_t, st_t = crossfit_parallel(nuis_t, kt, X, t, folds, k, rules,
+                                        executor=exe)
     return CrossfitResult(oof_y=oof_y, oof_t=oof_t, folds=folds,
                           states_y=st_y, states_t=st_t)

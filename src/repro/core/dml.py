@@ -109,7 +109,8 @@ class DMLResult:
             res = delete_fold_jackknife(
                 ctx.y, ctx.t, cf.oof_y, cf.oof_t, cf.folds, ctx.phi,
                 self.cfg.n_folds, alpha=a, executor=exe,
-                point=self.theta, point_se=self.stderr, rules=ctx.rules)
+                point=self.theta, point_se=self.stderr, rules=ctx.rules,
+                row_block=self.cfg.row_block)
         else:
             scheme = "pairs" if method == "bootstrap" else method
             res = dml_bootstrap(
@@ -117,7 +118,8 @@ class DMLResult:
                 XW=ctx.XW, y=ctx.y, t=ctx.t, phi=ctx.phi,
                 key=jax.random.fold_in(ctx.key, 0x0b00), alpha=a,
                 n_replicates=n_boot, scheme=scheme, executor=exe,
-                point=self.theta, point_se=self.stderr, rules=ctx.rules)
+                point=self.theta, point_se=self.stderr, rules=ctx.rules,
+                row_block=self.cfg.row_block)
         self._inf_cache[cache_key] = res
         return res
 
@@ -190,7 +192,9 @@ class DML:
         cf = crossfit(self.nuis_y, self.nuis_t, key, XW, y, t,
                       self.cfg.n_folds, self.cfg.engine, self.rules)
         phi = cate_basis(X, self.cfg.cate_features)
-        fs = fit_final_stage(y, t, cf.oof_y, cf.oof_t, phi)
+        fs = fit_final_stage(y, t, cf.oof_y, cf.oof_t, phi,
+                             row_block=self.cfg.row_block,
+                             rules=self.rules)
         theta_at_x = phi @ fs.theta
         diag = compute_diagnostics(y, t, cf.oof_y, cf.oof_t, theta_at_x)
         ctx = FitContext(y=y, t=t, XW=XW, phi=phi, key=key,

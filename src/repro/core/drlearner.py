@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import CausalConfig
+from repro.core import moments
 from repro.core.crossfit import fold_ids, fold_weights, _oof_select
 from repro.core.final_stage import cate_basis
 from repro.core.nuisance import Nuisance, make_logistic, make_ridge
@@ -76,7 +77,8 @@ class DRResult:
             X=ctx["X"], y=ctx["y"], t=ctx["t"], phi=ctx["phi"],
             key=jax.random.fold_in(ctx["key"], 0x0b00), alpha=a,
             n_replicates=n_boot, scheme=scheme, executor=exe,
-            clip=ctx["clip"], point=self.theta, ate_point=self.ate)
+            clip=ctx["clip"], point=self.theta, ate_point=self.ate,
+            row_block=cfg.row_block)
         self._inf_cache[ck] = res
         return res
 
@@ -114,9 +116,10 @@ class DRLearner:
                  propensity: Optional[Nuisance] = None,
                  clip: float = 0.01):
         self.cfg = cfg
-        self.outcome = outcome or make_ridge(cfg.ridge_lambda)
-        self.propensity = propensity or make_logistic(cfg.ridge_lambda,
-                                                      cfg.newton_iters)
+        self.outcome = outcome or make_ridge(cfg.ridge_lambda,
+                                             row_block=cfg.row_block)
+        self.propensity = propensity or make_logistic(
+            cfg.ridge_lambda, cfg.newton_iters, row_block=cfg.row_block)
         self.clip = clip
 
     def _crossfit_outcome_arm(self, key, X, y, t, folds, arm: int):
@@ -161,9 +164,15 @@ class DRLearner:
         ate = float(psi.mean())
         se = float(psi.std(ddof=1) / jnp.sqrt(n))
 
+        # pseudo-outcome regression as one (optionally row-blocked)
+        # augmented-moments pass: psi rides as the appended column
         phi = cate_basis(X, self.cfg.cate_features)
-        G = phi.T @ phi + 1e-8 * n * jnp.eye(phi.shape[1])
-        theta = jnp.linalg.solve(G, phi.T @ psi)
+        q = phi.shape[1]
+        Gaug, _ = moments.weighted_gram(phi, jnp.ones((n,), jnp.float32),
+                                        append=psi,
+                                        row_block=self.cfg.row_block)
+        G = Gaug[:q, :q] + 1e-8 * n * jnp.eye(q)
+        theta = jnp.linalg.solve(G, Gaug[:q, q])
         ctx = {"X": X, "y": y, "t": t, "phi": phi, "key": key,
                "outcome": self.outcome, "propensity": self.propensity,
                "clip": self.clip}

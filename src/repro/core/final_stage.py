@@ -4,11 +4,23 @@
     ry = y - m_y(X),  rt = t - m_t(X),  Z = rt ⊙ phi(X)
     theta = argmin  Σ (ry - <theta, phi>·rt)²   ⇒   (ZᵀZ)θ = Zᵀry
 
-At the paper's scale (n=1M, p≈500) the moments are the bandwidth hot
-spot; the fused Pallas ``residual_gram`` kernel streams each row once
-(HBM→VMEM) and accumulates G/b in VMEM.  Rows are sharded over the
-``data`` mesh axis; the (p,p) moments are the only thing reduced — the
-same shape as Ray's driver-side aggregation but executed as one psum.
+All sufficient statistics come from the streaming moments engine
+(repro.core.moments).  Two memory regimes:
+
+  row_block = 0   whole-array: the fused Pallas ``residual_gram``
+                  kernel (HBM→VMEM, one pass) computes G/b, and the
+                  HC0 meat is a dense einsum over the materialized
+                  (n, p_phi) moment matrix Z — fastest when Z fits.
+  row_block = R   chunked: a ``lax.scan`` over row blocks streams BOTH
+                  passes (G/b, then the meat at the solved theta), so
+                  the dense Z and the residual vector never
+                  materialize — peak temporaries are O(R·p_phi), which
+                  is what lets n exceed a single-allocation budget
+                  (paper §5.3 "industrial scale").  Each block is
+                  constrained on the ``rows`` mesh axis; the (p,p)
+                  moments are the only thing reduced — the same shape
+                  as Ray's driver-side aggregation but executed as one
+                  psum.
 
 Inference: heteroskedasticity-robust (HC0) sandwich covariance, matching
 EconML's ``StatsModelsLinearRegression`` final stage.
@@ -21,6 +33,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import moments
 from repro.kernels.residual_gram import ops as rg_ops
 
 
@@ -48,10 +61,29 @@ class FinalStageResult:
 
 def fit_final_stage(y: jax.Array, t: jax.Array, my: jax.Array,
                     mt: jax.Array, phi: jax.Array, *,
-                    ridge: float = 1e-8, backend: str = ""
-                    ) -> FinalStageResult:
-    """Solve the orthogonal moment.  y,t,my,mt: (n,); phi: (n, p_phi)."""
+                    ridge: float = 1e-8, backend: str = "",
+                    row_block: int = 0, strategy: Optional[str] = None,
+                    rules=None) -> FinalStageResult:
+    """Solve the orthogonal moment.  y,t,my,mt: (n,); phi: (n, p_phi).
+
+    ``row_block > 0`` streams every moment in fixed-order row blocks
+    (see module docstring); chunked and "whole" blocked evaluation of
+    the same row_block are bit-identical by construction."""
     n, p = phi.shape
+    r = moments.resolve_row_block(n, row_block)
+    if r > 0:
+        G, b = moments.residual_moments(y, t, my, mt, phi, row_block=r,
+                                        strategy=strategy, rules=rules,
+                                        backend=backend)
+        A = G + ridge * n * jnp.eye(p, dtype=jnp.float32)
+        theta = jnp.linalg.solve(A, b)
+        meat = moments.residual_meat(y, t, my, mt, phi, theta,
+                                     row_block=r, strategy=strategy,
+                                     rules=rules)
+        Ainv = jnp.linalg.inv(A)
+        cov = Ainv @ meat @ Ainv
+        return FinalStageResult(theta=theta, cov=cov, gram=G / n, n=n)
+
     G, b = rg_ops.residual_gram(y, t, my, mt, phi, backend=backend)
     A = G + ridge * n * jnp.eye(p, dtype=jnp.float32)
     theta = jnp.linalg.solve(A, b)

@@ -1,0 +1,340 @@
+"""Streaming sufficient-statistics engine — the single estimation
+substrate shared by nuisance fits, the orthogonal final stage, and
+replicate inference.
+
+Every estimator in this codebase bottoms out in weighted Gram-shaped
+moments: ridge/logistic normal equations, the leave-one-out fold Grams
+of cross-fitting, the Neyman-orthogonal final stage, and the
+reweighted refits of bootstrap/jackknife inference.  Wong's
+*Computational Causal Inference* argues that condensing estimation to
+such sufficient statistics is the path to industrial scale; More et
+al. (2409.02332) stream DML in row chunks.  This module is both ideas
+as one API: compute ``Σ_n w_n · d_n d_nᵀ`` (and friends) over a row
+design ``d`` with a *fixed block decomposition* and two evaluation
+strategies.
+
+Memory model
+------------
+  row_block = 0   one whole-array block — the legacy einsum forms
+                  verbatim (fastest when (n, q) activations fit in a
+                  single allocation; the default).
+  row_block = R   rows are zero-padded to a multiple of R and reduced
+                  block-by-block in FIXED left-to-right order:
+
+      strategy "whole"    every block partial materializes at once
+                          (one vmapped block program + an ordered
+                          fold) — peak memory ~ O(n·q + B·q²);
+      strategy "chunked"  ``lax.scan`` streams one dynamic-sliced
+                          block at a time, each block constrained on
+                          the ``rows`` mesh axis — peak memory
+                          ~ O(R·q + q²).  n is no longer bounded by a
+                          single dense allocation: the actual
+                          "industrial scale" claim.
+
+Bit-identity contract
+---------------------
+For equal ``row_block`` the two strategies are bit-identical *by
+construction* (tests/test_moments.py asserts exact equality):
+
+  * identical block decomposition and zero-row padding (padded rows
+    carry zero weight / zero design entries, which contribute exactly
+    0.0 to every accumulator);
+  * identical per-block einsum forms — the augmented-Gram vocabulary
+    of ``repro.inference.numerics``: cross-moments are read off
+    appended design columns, NEVER the thin ``ni,n->i`` shape class,
+    whose reduction XLA reassociates under fusion (measured: the thin
+    form breaks chunked-vs-whole equality, the augmented form does
+    not);
+  * identical left-fold reduction order over blocks (a ``lax.scan``
+    accumulation in both strategies).
+
+Different ``row_block`` values commute only up to float reassociation;
+estimator-level invariance across settings is asserted with tight
+tolerances, not bitwise.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import constrain
+
+Array = jax.Array
+
+
+def resolve_row_block(n: int, row_block: Optional[int]) -> int:
+    """0 means "one whole-array block" (legacy forms); any R >= n
+    collapses to the same thing."""
+    r = int(row_block or 0)
+    return 0 if r <= 0 or r >= n else r
+
+
+def design(X: Array, *, intercept: bool = False,
+           append: Optional[Array] = None) -> Array:
+    """Assemble the per-(block-)row design ``[X | 1? | append?]`` in
+    fp32.  ``append`` (a target / residual column) is how cross-moments
+    ride inside a Gram — the replicate-invariant trick from
+    repro.inference.numerics."""
+    f32 = jnp.float32
+    cols = [X.astype(f32)]
+    if intercept:
+        cols.append(jnp.ones((X.shape[0], 1), f32))
+    if append is not None:
+        a = append.astype(f32)
+        cols.append(a[:, None] if a.ndim == 1 else a)
+    return cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
+
+
+def blocked_reduce(block_fn: Callable[..., Any], arrays: Sequence[Array],
+                   *, row_block: int = 0, strategy: Optional[str] = None,
+                   rules=None, pad_values: Optional[Sequence] = None) -> Any:
+    """Reduce ``block_fn`` over row blocks of the leading axis.
+
+    ``block_fn(*blocks) -> pytree`` must be row-additive AND must map
+    zero-padded rows to exactly-zero contributions (every Gram-shaped
+    form here does: padded rows carry zero weights / zero one-hot rows
+    / zero design entries).  ``pad_values`` overrides the per-array
+    padding constant (e.g. -1 for integer fold ids so their one-hot is
+    the zero row).
+
+    row_block == 0 evaluates ``block_fn`` once on the whole arrays —
+    the legacy path, byte-for-byte.  Otherwise the same fixed
+    decomposition is reduced left-to-right either all-at-once
+    ("whole") or streamed ("chunked"); see the module docstring for
+    the bit-identity contract.
+    """
+    arrays = tuple(arrays)
+    n = arrays[0].shape[0]
+    r = resolve_row_block(n, row_block)
+    if r == 0:
+        return block_fn(*arrays)
+    strategy = strategy or "chunked"
+    pad = (-n) % r
+    if pad:
+        pv = pad_values or (0,) * len(arrays)
+        arrays = tuple(
+            jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1),
+                    constant_values=v)
+            for a, v in zip(arrays, pv))
+    nb = (n + pad) // r
+    tmap = jax.tree_util.tree_map
+    if strategy == "whole":
+        blocks = tuple(
+            constrain(a.reshape((nb, r) + a.shape[1:]),
+                      ("row_block", "rows") + (None,) * (a.ndim - 1), rules)
+            for a in arrays)
+        parts = jax.vmap(block_fn)(*blocks)
+        acc0 = tmap(lambda x: jnp.zeros(x.shape[1:], x.dtype), parts)
+        out, _ = lax.scan(lambda acc, g: (tmap(jnp.add, acc, g), None),
+                          acc0, parts)
+        return out
+    if strategy != "chunked":
+        raise ValueError(f"unknown strategy {strategy!r} "
+                         "(expected whole | chunked)")
+
+    def step(acc, i):
+        blks = tuple(
+            constrain(lax.dynamic_slice_in_dim(a, i * r, r, axis=0),
+                      ("rows",) + (None,) * (a.ndim - 1), rules)
+            for a in arrays)
+        return tmap(jnp.add, acc, block_fn(*blks)), None
+
+    shapes = jax.eval_shape(
+        block_fn, *[jax.ShapeDtypeStruct((r,) + a.shape[1:], a.dtype)
+                    for a in arrays])
+    acc0 = tmap(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+    out, _ = lax.scan(step, acc0, jnp.arange(nb, dtype=jnp.int32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Weighted moments (ridge / logistic normal equations, HC0 meats).
+# ---------------------------------------------------------------------------
+
+def weighted_gram(X: Array, w: Array, *, intercept: bool = False,
+                  append: Optional[Array] = None, row_block: int = 0,
+                  strategy: Optional[str] = None, rules=None
+                  ) -> Tuple[Array, Array]:
+    """``G = Σ_n w_n d_n d_nᵀ`` over ``d = [X | 1? | append?]`` plus
+    ``n_eff = Σ_n w_n`` from the same blocked reduction.  With
+    ``append=y``, the cross-moment ``Σ w·d·y`` is ``G[:, -1]``."""
+    if append is None:
+        def block(Xb, wb):
+            D = design(Xb, intercept=intercept)
+            ws = wb.astype(jnp.float32)
+            return jnp.einsum("ni,n,nj->ij", D, ws, D), ws.sum()
+        return blocked_reduce(block, (X, w), row_block=row_block,
+                              strategy=strategy, rules=rules)
+
+    def block(Xb, ab, wb):
+        D = design(Xb, intercept=intercept, append=ab)
+        ws = wb.astype(jnp.float32)
+        return jnp.einsum("ni,n,nj->ij", D, ws, D), ws.sum()
+
+    return blocked_reduce(block, (X, append, w), row_block=row_block,
+                          strategy=strategy, rules=rules)
+
+
+def weighted_gram_and_vec(X: Array, wg: Array, v: Array, *,
+                          intercept: bool = False, row_block: int = 0,
+                          strategy: Optional[str] = None, rules=None
+                          ) -> Tuple[Array, Array, Array]:
+    """One blocked pass returning ``(G = Σ wg_n d_n d_nᵀ,
+    u = Σ v_n d_n, n_eff = Σ wg_n)`` — Gram and cross-moment with
+    *different* row weights sharing a single read of X (the logistic
+    Newton step: Hessian weights s, gradient residuals r).
+
+    The thin ``ni,n->i`` cross-moment here is row-additive but NOT
+    bit-stable between the two strategies (XLA reassociates it under
+    fusion) — use an appended design column (``weighted_gram(...,
+    append=)``) when the bit-identity contract matters."""
+    def block(Xb, wb, vb):
+        D = design(Xb, intercept=intercept)
+        ws = wb.astype(jnp.float32)
+        return (jnp.einsum("ni,n,nj->ij", D, ws, D),
+                jnp.einsum("ni,n->i", D, vb.astype(jnp.float32)),
+                ws.sum())
+
+    return blocked_reduce(block, (X, wg, v), row_block=row_block,
+                          strategy=strategy, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# Fold-segmented moments (the leave-one-out identity of cross-fitting:
+# Xᵀdiag(w_k)X = G_total - G_heldout_k needs one segmented pass).
+# ---------------------------------------------------------------------------
+
+def fold_gram(X: Array, folds: Array, k: int, *, intercept: bool = False,
+              append: Optional[Array] = None, row_block: int = 0,
+              strategy: Optional[str] = None, rules=None
+              ) -> Tuple[Array, Array]:
+    """One-pass fold-segmented Gram: ``Gh[k] = Σ_{n in fold k} d_n d_nᵀ``
+    (k, q, q) plus per-fold row counts (k,).  Integer fold ids are
+    padded with -1 so padded rows one-hot to the zero row."""
+    def block(Xb, fb, *rest):
+        D = design(Xb, intercept=intercept,
+                   append=rest[0] if rest else None)
+        oh = jax.nn.one_hot(fb, k, dtype=jnp.float32)
+        return jnp.einsum("nk,ni,nj->kij", oh, D, D), oh.sum(0)
+
+    arrays = (X, folds) + (() if append is None else (append,))
+    pad_values = (0, -1) + (() if append is None else (0,))
+    return blocked_reduce(block, arrays, row_block=row_block,
+                          strategy=strategy, rules=rules,
+                          pad_values=pad_values)
+
+
+def fold_weighted_gram(X: Array, Wk: Array, *, intercept: bool = False,
+                       append: Optional[Array] = None, row_block: int = 0,
+                       strategy: Optional[str] = None, rules=None
+                       ) -> Tuple[Array, Array]:
+    """``G[k] = Σ_n Wk[k,n] d_n d_nᵀ`` (k, q, q) plus per-fold
+    ``n_eff = Σ_n Wk[k,n]`` — the replicate-invariant
+    ``ni,kn,nj->kij`` form of repro.inference.numerics, blocked.  At
+    row_block=0 this IS the legacy whole-array einsum, bitwise."""
+    f32 = jnp.float32
+    r = resolve_row_block(X.shape[0], row_block)
+    # n_eff is an O(n·k) plain sum — computed whole-array in EVERY mode
+    # so it is strategy-independent by construction (slicing the
+    # transposed Wk operand per block reassociates its reduction)
+    n_eff = Wk.astype(f32).sum(axis=1)
+    if r == 0:
+        D = design(X, intercept=intercept, append=append)
+        return jnp.einsum("ni,kn,nj->kij", D, Wk.astype(f32), D), n_eff
+
+    def block(Xb, Wb, *rest):
+        D = design(Xb, intercept=intercept,
+                   append=rest[0] if rest else None)
+        return jnp.einsum("ni,kn,nj->kij", D, Wb.astype(f32).T, D)
+
+    arrays = (X, Wk.T) + (() if append is None else (append,))
+    G = blocked_reduce(block, arrays, row_block=r, strategy=strategy,
+                       rules=rules)
+    return G, n_eff
+
+
+# ---------------------------------------------------------------------------
+# Residual moments (the DML final stage): Z = (t - mt) ⊙ phi,
+# G = ZᵀZ, b = Zᵀ(y - my), meat = Σ e²·z zᵀ.
+# ---------------------------------------------------------------------------
+
+def residual_moments(y: Array, t: Array, my: Array, mt: Array, phi: Array,
+                     *, row_block: int = 0, strategy: Optional[str] = None,
+                     rules=None, backend: str = ""
+                     ) -> Tuple[Array, Array]:
+    """(G (p,p), b (p,)) of the orthogonal moment, fp32.  row_block=0
+    delegates to the fused ``residual_gram`` kernel dispatch (Pallas on
+    TPU, jnp oracle elsewhere) — today's whole-array path, bitwise.
+    Blocked evaluation streams row blocks; with a Pallas-capable
+    backend each block takes the fused kernel (one HBM pass per block),
+    otherwise the augmented ``M = [Z | ry]`` Gram form (the thin
+    ``Zᵀry`` mat-vec is not chunked-stable; the augmented column is)."""
+    from repro.kernels.residual_gram import ops as rg_ops
+    n, p = phi.shape
+    r = resolve_row_block(n, row_block)
+    if r == 0:
+        return rg_ops.residual_gram(y, t, my, mt, phi, backend=backend)
+    if backend in ("pallas", "interpret"):
+        def block(yb, tb, myb, mtb, phib):
+            return rg_ops.residual_gram(yb, tb, myb, mtb, phib,
+                                        backend=backend,
+                                        block_n=min(512, r))
+    else:
+        def block(yb, tb, myb, mtb, phib):
+            ry = (yb - myb).astype(jnp.float32)
+            rt = (tb - mtb).astype(jnp.float32)
+            z = rt[:, None] * phib.astype(jnp.float32)
+            M = jnp.concatenate([z, ry[:, None]], axis=1)
+            Gaug = M.T @ M
+            return Gaug[:p, :p], Gaug[:p, p]
+
+    return blocked_reduce(block, (y, t, my, mt, phi), row_block=r,
+                          strategy=strategy, rules=rules)
+
+
+def residual_weighted_gram(ry: Array, rt: Array, phi: Array, w: Array,
+                           *, row_block: int = 0,
+                           strategy: Optional[str] = None, rules=None
+                           ) -> Tuple[Array, Array]:
+    """Weighted augmented residual Gram ``Σ_n w_n m_n m_nᵀ`` with
+    ``m = [rt·phi | ry]`` plus ``n_eff = Σ w`` — the replicate-invariant
+    weighted-final-stage moment (inference.numerics.weighted_theta).
+    Z is formed per block: on the blocked path the dense (n, p) moment
+    matrix never materializes."""
+    f32 = jnp.float32
+
+    def block(ryb, rtb, phib, wb):
+        Z = rtb.astype(f32)[:, None] * phib.astype(f32)
+        M = jnp.concatenate([Z, ryb.astype(f32)[:, None]], axis=1)
+        ws = wb.astype(f32)
+        return jnp.einsum("ni,n,nj->ij", M, ws, M), ws.sum()
+
+    return blocked_reduce(block, (ry, rt, phi, w), row_block=row_block,
+                          strategy=strategy, rules=rules)
+
+
+def residual_meat(y: Array, t: Array, my: Array, mt: Array, phi: Array,
+                  theta: Array, *, w: Optional[Array] = None,
+                  row_block: int = 0, strategy: Optional[str] = None,
+                  rules=None) -> Array:
+    """HC0 meat ``Σ_n (w_n e_n)² z_n z_nᵀ`` with ``e = ry - <z, theta>``
+    streamed per block — the dense (n, p) moment matrix ``z`` and the
+    residual vector never materialize on the blocked path.  The inner
+    product uses the small-axis ``(z * theta).sum(-1)`` form (replicate-
+    and chunk-invariant), matching inference.numerics.weighted_theta."""
+    def block(yb, tb, myb, mtb, phib, *rest):
+        ry = (yb - myb).astype(jnp.float32)
+        rt = (tb - mtb).astype(jnp.float32)
+        z = rt[:, None] * phib.astype(jnp.float32)
+        e = ry - (z * theta[None, :]).sum(axis=1)
+        if rest:
+            e = rest[0].astype(jnp.float32) * e
+        return jnp.einsum("ni,n,nj->ij", z, jnp.square(e), z)
+
+    arrays = (y, t, my, mt, phi) + (() if w is None else (w,))
+    return blocked_reduce(block, arrays, row_block=row_block,
+                          strategy=strategy, rules=rules)

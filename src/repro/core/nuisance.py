@@ -22,13 +22,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import CausalConfig
+from repro.core import moments
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
 from repro.config import TrainConfig
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class Nuisance:
     """Pure-function model bundle.  All fns are jit/vmap-compatible.
+    Identity-hashed (eq=False) so executor-facing closure caches can
+    key on the instance (``hyper`` holds an unhashable dict).
 
     init(key, p)            -> state
     fit(state, X, y, w)     -> state      (w: (n,) sample weights)
@@ -57,52 +60,60 @@ def _aug(X: jax.Array) -> jax.Array:
 # Ridge regression (closed form — one Gram + solve)
 # ---------------------------------------------------------------------------
 
-def make_ridge(lam: float = 1e-3) -> Nuisance:
+def make_ridge(lam: float = 1e-3, row_block: int = 0) -> Nuisance:
     def init(key, p):
         return {"beta": jnp.zeros((p + 1,), jnp.float32),
                 "lam": jnp.asarray(lam, jnp.float32)}
 
     def fit(state, X, y, w):
-        Xa = _aug(X.astype(jnp.float32))
-        ws = w.astype(jnp.float32)
-        n_eff = jnp.maximum(ws.sum(), 1.0)
-        # weighted normal equations; Gram is (p+1)^2 — the psum'd moment
-        G = jnp.einsum("ni,n,nj->ij", Xa, ws, Xa) / n_eff
-        b = jnp.einsum("ni,n->i", Xa, ws * y.astype(jnp.float32)) / n_eff
-        A = G + state["lam"] * jnp.eye(Xa.shape[1], dtype=jnp.float32)
-        beta = jnp.linalg.solve(A, b)
+        # weighted normal equations as ONE augmented sufficient-
+        # statistics pass (repro.core.moments): the target rides as an
+        # appended design column, so G and the cross-moment b come out
+        # of the same (optionally row-blocked) Gram reduction.
+        q = X.shape[1] + 1
+        Gaug, n_eff = moments.weighted_gram(X, w, intercept=True,
+                                            append=y, row_block=row_block)
+        n_eff = jnp.maximum(n_eff, 1.0)
+        A = Gaug[:q, :q] / n_eff \
+            + state["lam"] * jnp.eye(q, dtype=jnp.float32)
+        beta = jnp.linalg.solve(A, Gaug[:q, q] / n_eff)
         return {**state, "beta": beta}
 
     def predict(state, X):
         return _aug(X.astype(jnp.float32)) @ state["beta"]
 
     return Nuisance("ridge", "reg", init, fit, predict,
-                    hyper={"lam": lam})
+                    hyper={"lam": lam, "row_block": row_block})
 
 
 # ---------------------------------------------------------------------------
 # Logistic regression via Newton/IRLS (fixed iteration count -> jit-able)
 # ---------------------------------------------------------------------------
 
-def make_logistic(lam: float = 1e-3, iters: int = 16) -> Nuisance:
+def make_logistic(lam: float = 1e-3, iters: int = 16,
+                  row_block: int = 0) -> Nuisance:
     def init(key, p):
         return {"beta": jnp.zeros((p + 1,), jnp.float32),
                 "lam": jnp.asarray(lam, jnp.float32)}
 
     def fit(state, X, y, w):
-        Xa = _aug(X.astype(jnp.float32))
+        Xf = X.astype(jnp.float32)
         ws = w.astype(jnp.float32)
         yt = y.astype(jnp.float32)
+        q = X.shape[1] + 1
         n_eff = jnp.maximum(ws.sum(), 1.0)
-        lam_eye = state["lam"] * jnp.eye(Xa.shape[1], dtype=jnp.float32)
+        lam_eye = state["lam"] * jnp.eye(q, dtype=jnp.float32)
 
         def newton(_, beta):
-            z = Xa @ beta
+            z = Xf @ beta[:-1] + beta[-1]
             mu = jax.nn.sigmoid(z)
             s = jnp.clip(mu * (1 - mu), 1e-6, None) * ws
-            g = Xa.T @ (ws * (mu - yt)) / n_eff + state["lam"] * beta
-            H = jnp.einsum("ni,n,nj->ij", Xa, s, Xa) / n_eff + lam_eye
-            return beta - jnp.linalg.solve(H, g)
+            # Hessian + gradient in ONE weighted-moments pass over X
+            H, g_raw, _ = moments.weighted_gram_and_vec(
+                Xf, s, ws * (mu - yt), intercept=True,
+                row_block=row_block)
+            g = g_raw / n_eff + state["lam"] * beta
+            return beta - jnp.linalg.solve(H / n_eff + lam_eye, g)
 
         beta = jax.lax.fori_loop(0, iters, newton, state["beta"])
         return {**state, "beta": beta}
@@ -111,7 +122,8 @@ def make_logistic(lam: float = 1e-3, iters: int = 16) -> Nuisance:
         return jax.nn.sigmoid(_aug(X.astype(jnp.float32)) @ state["beta"])
 
     return Nuisance("logistic", "clf", init, fit, predict,
-                    hyper={"lam": lam, "iters": iters})
+                    hyper={"lam": lam, "iters": iters,
+                           "row_block": row_block})
 
 
 # ---------------------------------------------------------------------------
@@ -158,12 +170,15 @@ def make_mlp(task: str, hidden: Tuple[int, ...] = (256, 256),
         Xf = X.astype(jnp.float32)
         yf = y.astype(jnp.float32)
         wf = w.astype(jnp.float32)
+        # an "lr" state leaf overrides the baked-in rate, so tuning can
+        # sweep lr as DATA on one compiled program (core.tuning maps
+        # trials through the executor without re-tracing per trial)
+        lr_t = jnp.asarray(state.get("lr", lr), jnp.float32)
 
         def step(carry, _):
             params, opt = carry
             g = jax.grad(loss_fn)(params, Xf, yf, wf)
-            params, opt, _ = adamw_update(g, opt, params,
-                                          jnp.asarray(lr, jnp.float32), tcfg)
+            params, opt, _ = adamw_update(g, opt, params, lr_t, tcfg)
             return (params, opt), None
 
         (params, opt), _ = jax.lax.scan(step, (state["params"], state["opt"]),
@@ -204,16 +219,20 @@ def backbone_features(model, params, tokens: jax.Array,
 # ---------------------------------------------------------------------------
 
 def make_nuisance(kind: str, task: str, cfg: CausalConfig) -> Nuisance:
+    rb = cfg.row_block
     if kind == "ridge":
-        return make_ridge(cfg.ridge_lambda)
+        return make_ridge(cfg.ridge_lambda, row_block=rb)
     if kind == "logistic":
-        return make_logistic(cfg.ridge_lambda, cfg.newton_iters)
+        return make_logistic(cfg.ridge_lambda, cfg.newton_iters,
+                             row_block=rb)
     if kind == "mlp":
         return make_mlp(task, cfg.mlp_hidden, cfg.mlp_steps, cfg.mlp_lr)
     if kind == "backbone":
         # heads over precomputed backbone features; same linear math
-        return (make_logistic(cfg.ridge_lambda, cfg.newton_iters)
-                if task == "clf" else make_ridge(cfg.ridge_lambda))
+        return (make_logistic(cfg.ridge_lambda, cfg.newton_iters,
+                              row_block=rb)
+                if task == "clf" else make_ridge(cfg.ridge_lambda,
+                                                 row_block=rb))
     raise ValueError(f"unknown nuisance kind {kind!r}")
 
 
@@ -233,27 +252,27 @@ def make_nuisance(kind: str, task: str, cfg: CausalConfig) -> Nuisance:
 # logistic converges monotonically to the same optimum (MM guarantee).
 # ---------------------------------------------------------------------------
 
-def _fold_grams(Xa: jax.Array, folds: jax.Array, k: int):
+def _fold_grams(Xa: jax.Array, folds: jax.Array, k: int,
+                row_block: int = 0):
     """One-pass fold-segmented Gram: returns (G_heldout (k,p,p),
-    G_total (p,p)).  The (k,n) one-hot contraction reads X once."""
-    f32 = jnp.float32
-    onehot = jax.nn.one_hot(folds, k, dtype=f32)           # (n, k)
-    Gh = jnp.einsum("nk,ni,nj->kij", onehot, Xa.astype(f32),
-                    Xa.astype(f32))
+    G_total (p,p)).  Delegates to the moments engine (row_block > 0
+    streams the pass in fixed-order row blocks)."""
+    Gh, _ = moments.fold_gram(Xa, folds, k, row_block=row_block)
     return Gh, Gh.sum(0)
 
 
 def ridge_fit_folds(lam: float, X: jax.Array, y: jax.Array,
-                    folds: jax.Array, k: int):
-    """EXACT per-fold ridge via the LOO identity; one X pass."""
+                    folds: jax.Array, k: int, row_block: int = 0):
+    """EXACT per-fold ridge via the LOO identity; one X pass.  The
+    target rides as an appended design column of the segmented Gram,
+    so the per-fold cross-moments come out of the same reduction."""
     f32 = jnp.float32
-    Xa = _aug(X.astype(f32))
-    n, p = Xa.shape
-    Gh, G = _fold_grams(Xa, folds, k)
-    onehot = jax.nn.one_hot(folds, k, dtype=f32)
-    bh = jnp.einsum("nk,n,ni->ki", onehot, y.astype(f32), Xa)
-    b_tot = bh.sum(0)
-    counts = onehot.sum(0)                                  # rows per fold
+    n, p = X.shape[0], X.shape[1] + 1
+    Gh_aug, counts = moments.fold_gram(X, folds, k, intercept=True,
+                                       append=y, row_block=row_block)
+    G_aug = Gh_aug.sum(0)
+    Gh, G = Gh_aug[:, :p, :p], G_aug[:p, :p]
+    bh, b_tot = Gh_aug[:, :p, p], G_aug[:p, p]
     n_eff = jnp.maximum(n - counts, 1.0)[:, None, None]
     A = (G[None] - Gh) / n_eff + lam * jnp.eye(p, dtype=f32)[None]
     rhs = (b_tot[None] - bh) / n_eff[..., 0]
@@ -262,14 +281,14 @@ def ridge_fit_folds(lam: float, X: jax.Array, y: jax.Array,
 
 
 def logistic_fit_folds(lam: float, iters: int, X: jax.Array, t: jax.Array,
-                       folds: jax.Array, k: int):
+                       folds: jax.Array, k: int, row_block: int = 0):
     """Per-fold logistic via fixed-Hessian majorization (Böhning-Lindsay):
-    H0_k = Xᵀdiag(w_k)X/4 + λI factored ONCE (LOO identity), then
-    ``iters`` MM steps of two matvecs each."""
+    H0_k = Xᵀdiag(w_k)X/4 + λI factored ONCE (LOO identity via one
+    moments pass), then ``iters`` MM steps of two matvecs each."""
     f32 = jnp.float32
     Xa = _aug(X.astype(f32))
     n, p = Xa.shape
-    Gh, G = _fold_grams(Xa, folds, k)
+    Gh, G = _fold_grams(Xa, folds, k, row_block=row_block)
     onehot = jax.nn.one_hot(folds, k, dtype=f32)            # (n, k)
     w = 1.0 - onehot                                        # train weights
     counts = onehot.sum(0)

@@ -23,6 +23,7 @@ wrappers report.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
@@ -101,6 +102,26 @@ class HalvingResult:
     history: Tuple[Dict, ...]   # per-rung survivor sets + scores
 
 
+@functools.lru_cache(maxsize=None)
+def _halving_trial_fn(task: str, hidden: Tuple[int, ...], steps: int):
+    """Stable per-(task, hidden, steps) trial closure.  lr enters as
+    mapped DATA (an ``lr`` state leaf overrides make_mlp's baked rate),
+    so one rung is ONE executor.map over the trial axis and the
+    executor's _JitCache gets the SAME closure object on every call —
+    the old per-rung lambda re-traced every rung (and every trial)."""
+    nz = make_mlp(task, hidden=hidden, steps=steps)
+
+    def trial(lr, X, target, W, folds, st0):
+        def one_fold(w):
+            st = nz.fit({**st0, "lr": lr}, X, target, w)
+            return nz.predict(st, X)
+
+        preds = jax.vmap(one_fold)(W)                       # (K, n)
+        return _oof_score(preds, folds, target, task)
+
+    return trial
+
+
 def successive_halving(task: str, lrs: jax.Array, X: jax.Array,
                        target: jax.Array, *, n_folds: int = 3,
                        base_steps: int = 25, eta: int = 2, rungs: int = 3,
@@ -114,23 +135,17 @@ def successive_halving(task: str, lrs: jax.Array, X: jax.Array,
     history = []
     steps = base_steps
     exe = make_executor(executor)
+    # init is lr-independent: one state serves every trial and rung
+    st0 = make_mlp(task, hidden=hidden, steps=base_steps).init(
+        key, X.shape[1])
     for rung in range(rungs):
         cur = lrs[survivors]
-        # lr is a python closure of make_mlp (it parameterizes the jitted
-        # scan), so trials within a rung are a python loop of fits whose
-        # FOLD axis goes through the executor — rung sizes shrink
-        # geometrically, so the loop is short; fold concurrency is where
-        # the batching pays.
-        scores = []
-        for lr in cur.tolist():
-            nz = make_mlp(task, hidden=hidden, steps=steps, lr=lr)
-            st0 = nz.init(key, X.shape[1])
-            preds = exe.map(
-                lambda w, X_, tg, st: nz.predict(nz.fit(st, X_, tg, w),
-                                                 X_),
-                W, X, target, st0)
-            scores.append(_oof_score(preds, folds, target, task))
-        scores = jnp.stack(scores)
+        # the trial axis goes through the executor (C2's population
+        # axis): the whole rung is one dispatched map over lr values;
+        # only a change of ``steps`` (the static scan length) can ever
+        # force a new trace, and the closure cache is keyed on it.
+        trial = _halving_trial_fn(task, tuple(hidden), steps)
+        scores = exe.map(trial, cur, X, target, W, folds, st0)
         order = jnp.argsort(scores)
         keep = max(1, len(survivors) // eta)
         history.append({"rung": rung, "steps": steps,

@@ -64,23 +64,28 @@ def _hyper(nuis: Nuisance, name: str, default):
 
 
 def fit_predict_folds(nuis: Nuisance, key: jax.Array, X: jax.Array,
-                      target: jax.Array, Wk: jax.Array) -> jax.Array:
+                      target: jax.Array, Wk: jax.Array,
+                      row_block: int = 0) -> jax.Array:
     """(k, n) fold-model predictions under weighted training.
 
     ridge/logistic take the replicate-invariant fold-batched kernels
-    (serial == vmap bitwise); other nuisances (MLP, custom) fall back to
-    vmapping ``nuis.fit`` over folds — statistically identical, but
-    LAPACK-free bit-identity is not guaranteed there.
+    (serial == vmap bitwise), streamed in row blocks when the nuisance
+    carries a ``row_block`` hyper (or one is passed); other nuisances
+    (MLP, custom) fall back to vmapping ``nuis.fit`` over folds —
+    statistically identical, but LAPACK-free bit-identity is not
+    guaranteed there.
     """
+    rb = row_block or int(_hyper(nuis, "row_block", 0))
     if nuis.name == "ridge":
         lam = _hyper(nuis, "lam", 1e-3)
         return predict_folds_linear(
-            ridge_fit_folds_w(lam, X, target, Wk), X)
+            ridge_fit_folds_w(lam, X, target, Wk, row_block=rb), X)
     if nuis.name == "logistic":
         lam = _hyper(nuis, "lam", 1e-3)
         iters = int(_hyper(nuis, "iters", 16))
         return predict_folds_logistic(
-            logistic_fit_folds_w(lam, iters, X, target, Wk), X)
+            logistic_fit_folds_w(lam, iters, X, target, Wk,
+                                 row_block=rb), X)
     k = Wk.shape[0]
     keys = jax.random.split(key, k)
     st0 = jax.vmap(nuis.init, in_axes=(0, None))(keys, X.shape[1])
@@ -91,7 +96,7 @@ def fit_predict_folds(nuis: Nuisance, key: jax.Array, X: jax.Array,
 def dml_theta_once(nuis_y: Nuisance, nuis_t: Nuisance, n_folds: int,
                    XW: jax.Array, y: jax.Array, t: jax.Array,
                    phi: jax.Array, key: jax.Array, w: jax.Array,
-                   *, with_se: bool = True
+                   *, with_se: bool = True, row_block: int = 0
                    ) -> Dict[str, jax.Array]:
     """One full weighted DML re-estimation (the replicate closure body):
     fold keys re-derived from ``key``, nuisances cross-fit under
@@ -100,11 +105,14 @@ def dml_theta_once(nuis_y: Nuisance, nuis_t: Nuisance, n_folds: int,
     kf, ky, kt = jax.random.split(key, 3)
     folds = fold_ids(kf, XW.shape[0], n_folds)
     Wk = fold_weights(folds, n_folds) * w[None, :]
-    oof_y = _oof_select(fit_predict_folds(nuis_y, ky, XW, y, Wk), folds)
-    oof_t = _oof_select(fit_predict_folds(nuis_t, kt, XW, t, Wk), folds)
+    oof_y = _oof_select(fit_predict_folds(nuis_y, ky, XW, y, Wk,
+                                          row_block), folds)
+    oof_t = _oof_select(fit_predict_folds(nuis_t, kt, XW, t, Wk,
+                                          row_block), folds)
     ry = y.astype(jnp.float32) - oof_y
     rt = t.astype(jnp.float32) - oof_t
-    theta, se = weighted_theta(ry, rt, phi, w, with_se=with_se)
+    theta, se = weighted_theta(ry, rt, phi, w, with_se=with_se,
+                               row_block=row_block)
     out = {"theta": theta}
     if se is not None:
         out["se"] = se
@@ -113,7 +121,7 @@ def dml_theta_once(nuis_y: Nuisance, nuis_t: Nuisance, n_folds: int,
 
 def make_dml_replicate_fn(nuis_y: Nuisance, nuis_t: Nuisance,
                           n_folds: int, *, scheme: str = "pairs",
-                          with_se: bool = True):
+                          with_se: bool = True, row_block: int = 0):
     """The bootstrap replicate closure: (key, XW, y, t, phi) ->
     {theta[, se]}.  The data tensors arrive as executor pass-through
     arguments (not closure constants) so compiled programs take them as
@@ -125,7 +133,8 @@ def make_dml_replicate_fn(nuis_y: Nuisance, nuis_t: Nuisance,
         kw, kfit = jax.random.split(kb)
         w = bootstrap_weights(kw, XW.shape[0], scheme)
         return dml_theta_once(nuis_y, nuis_t, n_folds, XW, y, t, phi,
-                              kfit, w, with_se=with_se)
+                              kfit, w, with_se=with_se,
+                              row_block=row_block)
 
     return replicate
 
@@ -138,12 +147,14 @@ def dml_bootstrap(nuis_y: Nuisance, nuis_t: Nuisance, *, n_folds: int,
                   with_se: bool = True,
                   point: Optional[jax.Array] = None,
                   point_se: Optional[jax.Array] = None,
-                  mesh=None, rules=None) -> InferenceResult:
+                  mesh=None, rules=None,
+                  row_block: int = 0) -> InferenceResult:
     """B weighted DML refits through the executor -> InferenceResult."""
     exe = make_executor(executor, mesh=mesh, rules=rules)
     keys = replicate_keys(key, n_replicates)
     replicate = make_dml_replicate_fn(nuis_y, nuis_t, n_folds,
-                                      scheme=scheme, with_se=with_se)
+                                      scheme=scheme, with_se=with_se,
+                                      row_block=row_block)
     out = exe.map(replicate, keys, XW, y, t, phi)
     thetas = out["theta"]
     se = jnp.std(thetas, axis=0, ddof=1)
@@ -157,8 +168,8 @@ def dml_bootstrap(nuis_y: Nuisance, nuis_t: Nuisance, *, n_folds: int,
 def dr_theta_once(outcome: Nuisance, propensity: Nuisance, n_folds: int,
                   X: jax.Array, y: jax.Array, t: jax.Array,
                   phi: jax.Array, key: jax.Array, w: jax.Array,
-                  *, clip: float = 0.01, with_se: bool = True
-                  ) -> Dict[str, jax.Array]:
+                  *, clip: float = 0.01, with_se: bool = True,
+                  row_block: int = 0) -> Dict[str, jax.Array]:
     """One weighted AIPW re-estimation (mirrors DRLearner.fit): weighted
     arm-wise outcome fits + weighted propensity, weighted pseudo-outcome
     regression on phi.  With the constant basis theta[0] IS the weighted
@@ -171,18 +182,18 @@ def dr_theta_once(outcome: Nuisance, propensity: Nuisance, n_folds: int,
     arm0 = (1.0 - tt)[None, :]
     arm1 = tt[None, :]
     wk = w[None, :]
-    m0 = _oof_select(fit_predict_folds(outcome, k0, X, y, W * arm0 * wk),
-                     folds)
-    m1 = _oof_select(fit_predict_folds(outcome, k1, X, y, W * arm1 * wk),
-                     folds)
-    e = _oof_select(fit_predict_folds(propensity, ke, X, tt, W * wk),
-                    folds)
+    m0 = _oof_select(fit_predict_folds(outcome, k0, X, y,
+                                       W * arm0 * wk, row_block), folds)
+    m1 = _oof_select(fit_predict_folds(outcome, k1, X, y,
+                                       W * arm1 * wk, row_block), folds)
+    e = _oof_select(fit_predict_folds(propensity, ke, X, tt, W * wk,
+                                      row_block), folds)
     e = jnp.clip(e, clip, 1.0 - clip)
     psi = (m1 - m0
            + tt * (y - m1) / e
            - (1.0 - tt) * (y - m0) / (1.0 - e))
     theta, se = weighted_theta(psi, jnp.ones((n,), jnp.float32), phi, w,
-                               with_se=with_se)
+                               with_se=with_se, row_block=row_block)
     # the ATE functional itself (DRResult.ate = mean psi), weighted —
     # theta[0] only equals it for the constant basis, so draw it too
     wf = w.astype(jnp.float32)
@@ -202,7 +213,8 @@ def dr_bootstrap(outcome: Nuisance, propensity: Nuisance, *, n_folds: int,
                  point: Optional[jax.Array] = None,
                  point_se: Optional[jax.Array] = None,
                  ate_point: Optional[float] = None,
-                 mesh=None, rules=None) -> InferenceResult:
+                 mesh=None, rules=None,
+                 row_block: int = 0) -> InferenceResult:
     """B weighted AIPW refits through the executor -> InferenceResult."""
     exe = make_executor(executor, mesh=mesh, rules=rules)
     keys = replicate_keys(key, n_replicates)
@@ -211,7 +223,8 @@ def dr_bootstrap(outcome: Nuisance, propensity: Nuisance, *, n_folds: int,
         kw, kfit = jax.random.split(kb)
         w = bootstrap_weights(kw, X_.shape[0], scheme)
         return dr_theta_once(outcome, propensity, n_folds, X_, y_, t_,
-                             phi_, kfit, w, clip=clip, with_se=with_se)
+                             phi_, kfit, w, clip=clip, with_se=with_se,
+                             row_block=row_block)
 
     out = exe.map(replicate, keys, X, y, t, phi)
     thetas = out["theta"]

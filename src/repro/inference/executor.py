@@ -182,6 +182,12 @@ class ShardMapExecutor:
         return jax.tree_util.tree_map(lambda y: y[:b], out)
 
 
+# Default serial/vmap executors are process-wide singletons: their
+# _JitCache (keyed on closure objects) is what turns "call crossfit /
+# bootstrap again" into a compile-cache hit instead of a re-trace.
+_DEFAULT_EXECUTORS: dict = {}
+
+
 def make_executor(name, *, mesh: Optional[Mesh] = None,
                   rules=None) -> Executor:
     """Factory.  ``name`` may already be an Executor (passed through).
@@ -193,9 +199,9 @@ def make_executor(name, *, mesh: Optional[Mesh] = None,
     if not isinstance(name, str) and isinstance(name, Executor):
         return name
     if name == "serial":
-        return SerialExecutor()
+        return _DEFAULT_EXECUTORS.setdefault("serial", SerialExecutor())
     if name == "vmap":
-        return VmapExecutor()
+        return _DEFAULT_EXECUTORS.setdefault("vmap", VmapExecutor())
     if name == "shard_map":
         axis = "data"
         if rules is not None:

@@ -2,12 +2,20 @@
 
 Cross-fitting already partitions the rows into k folds and computes
 out-of-fold nuisance predictions for every row.  The delete-group
-jackknife re-solves only the (tiny) final stage k times, dropping one
-fold of rows each time — no nuisance refits, so the marginal cost is
-k extra (p_phi, p_phi) solves on top of a finished DML fit.  This is the
-cheap end of the inference spectrum (bootstrap being the expensive end),
-and the k delete-fold thetas go through the same Executor as bootstrap
-replicates.
+jackknife is a *pure reweighted-moments pass*: ONE fold-segmented
+augmented residual Gram over the data (repro.core.moments, optionally
+streamed in row blocks), after which each delete-fold estimate is the
+LOO identity
+
+    G_(-j) = G_total - G_fold_j
+
+plus a (p_phi, p_phi) deterministic solve — no nuisance refits, no
+dataset re-indexing, k tiny solves on top of a finished DML fit.  This
+is the cheap end of the inference spectrum (bootstrap being the
+expensive end), and the k delete-fold solves go through the same
+Executor as bootstrap replicates (elementwise subtraction + the
+Gauss-Jordan solve are replicate-invariant, so serial == vmap holds
+bitwise here too).
 
 Variance: the delete-group jackknife estimator with k groups,
 
@@ -21,9 +29,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import moments
 from repro.inference.executor import make_executor
 from repro.inference.intervals import InferenceResult
-from repro.inference.numerics import weighted_theta
+from repro.inference.numerics import det_solve
 
 
 def delete_fold_jackknife(y: jax.Array, t: jax.Array, oof_y: jax.Array,
@@ -31,21 +40,36 @@ def delete_fold_jackknife(y: jax.Array, t: jax.Array, oof_y: jax.Array,
                           phi: jax.Array, n_folds: int, *,
                           alpha: float = 0.05, executor="vmap",
                           point=None, point_se=None,
-                          mesh=None, rules=None) -> InferenceResult:
+                          mesh=None, rules=None, ridge: float = 1e-8,
+                          row_block: int = 0) -> InferenceResult:
     """Jackknife over the existing fold partition.  y, t: (n,);
     oof_y/oof_t: (n,) out-of-fold nuisance predictions from the fit;
     folds: (n,) fold ids."""
     exe = make_executor(executor, mesh=mesh, rules=rules)
-    ry = y.astype(jnp.float32) - oof_y
-    rt = t.astype(jnp.float32) - oof_t
+    f32 = jnp.float32
+    n, p = phi.shape
+    ry = y.astype(f32) - oof_y
+    rt = t.astype(f32) - oof_t
 
-    def drop_fold(j, ry_, rt_, phi_, folds_):
-        w = (folds_ != j).astype(jnp.float32)
-        theta, _ = weighted_theta(ry_, rt_, phi_, w, with_se=False)
-        return theta
+    # one segmented pass: Gh[j] = Σ_{i in fold j} m_i m_iᵀ, m = [Z | ry]
+    def block(ryb, rtb, phib, fb):
+        Z = rtb[:, None] * phib.astype(f32)
+        M = jnp.concatenate([Z, ryb[:, None]], axis=1)
+        oh = jax.nn.one_hot(fb, n_folds, dtype=f32)
+        return jnp.einsum("nk,ni,nj->kij", oh, M, M), oh.sum(0)
 
-    thetas = exe.map(drop_fold, jnp.arange(n_folds, dtype=jnp.int32),
-                     ry, rt, phi, folds)
+    Gh, counts = moments.blocked_reduce(
+        block, (ry, rt, phi, folds), row_block=row_block, rules=rules,
+        pad_values=(0, 0, 0, -1))
+    G_tot = Gh.sum(0)
+    n_eff = jnp.maximum(n - counts, 1.0)                     # (k,)
+
+    def drop_fold(seg, G_tot_):
+        Gd = G_tot_ - seg["G"]
+        A = Gd[:p, :p] + ridge * seg["n_eff"] * jnp.eye(p, dtype=f32)
+        return det_solve(A, Gd[:p, p])
+
+    thetas = exe.map(drop_fold, {"G": Gh, "n_eff": n_eff}, G_tot)
     theta_bar = thetas.mean(axis=0)
     center = theta_bar if point is None else point
     k = float(n_folds)

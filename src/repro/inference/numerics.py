@@ -26,6 +26,15 @@ because every system we solve is SPD plus an explicit ridge.
 These kernels double as the weighted-fit path for bootstrap replicates:
 ``Wk`` carries fold-complement masks multiplied by per-row bootstrap
 weights, the same mechanism ``crossfit.fold_weights`` uses for C1.
+
+The Gram-shaped reductions themselves live in the streaming moments
+engine (``repro.core.moments``): this module no longer re-implements
+the weighted normal equations — it supplies the deterministic solves
+and the fold-batched *protocols* on top of the engine's augmented-Gram
+passes.  A ``row_block`` argument streams every pass in fixed-order
+row blocks (bounded memory at industrial n); at the default
+``row_block=0`` the einsum forms below are byte-for-byte the legacy
+whole-array ones, which is what keeps serial == vmap bit-identity.
 """
 from __future__ import annotations
 
@@ -33,6 +42,8 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import moments
 
 
 def det_solve(A: jax.Array, b: jax.Array) -> jax.Array:
@@ -79,16 +90,18 @@ def _aug(X: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def ridge_fit_folds_w(lam: jax.Array, X: jax.Array, y: jax.Array,
-                      Wk: jax.Array) -> jax.Array:
-    """Weighted per-fold ridge, one augmented Gram.  Returns beta (k, p+1)
-    (intercept last, matching nuisance.make_ridge's column order)."""
+                      Wk: jax.Array, *, row_block: int = 0,
+                      rules=None) -> jax.Array:
+    """Weighted per-fold ridge, one augmented fold-weighted Gram from
+    the moments engine.  Returns beta (k, p+1) (intercept last,
+    matching nuisance.make_ridge's column order)."""
     f32 = jnp.float32
-    Xa = _aug(X.astype(f32))
-    p = Xa.shape[1]
-    Z = jnp.concatenate([Xa, y.astype(f32)[:, None]], axis=1)   # (n, p+1)
-    Wk = Wk.astype(f32)
-    Gaug = jnp.einsum("ni,kn,nj->kij", Z, Wk, Z)                # (k,p+1,p+1)
-    n_eff = jnp.maximum(Wk.sum(axis=1), 1.0)                    # (k,)
+    p = X.shape[1] + 1
+    Gaug, n_eff = moments.fold_weighted_gram(X, Wk, intercept=True,
+                                             append=y,
+                                             row_block=row_block,
+                                             rules=rules)
+    n_eff = jnp.maximum(n_eff, 1.0)                             # (k,)
     A = Gaug[:, :p, :p] / n_eff[:, None, None] \
         + lam * jnp.eye(p, dtype=f32)[None]
     b = Gaug[:, :p, p] / n_eff[:, None]
@@ -96,9 +109,15 @@ def ridge_fit_folds_w(lam: jax.Array, X: jax.Array, y: jax.Array,
 
 
 def logistic_fit_folds_w(lam: jax.Array, iters: int, X: jax.Array,
-                         t: jax.Array, Wk: jax.Array) -> jax.Array:
+                         t: jax.Array, Wk: jax.Array, *,
+                         row_block: int = 0, rules=None) -> jax.Array:
     """Weighted per-fold Newton/IRLS logistic (same math as
-    nuisance.make_logistic, fold axis explicit).  Returns beta (k, p+1)."""
+    nuisance.make_logistic, fold axis explicit).  Returns beta (k, p+1).
+
+    The gradient mat-vec Σ_n r_kn·Xa_n is read off an augmented Gram
+    (ones column appended): the 2-operand "kn,np->kp" einsum changes
+    its reduction order when XLA fuses the elementwise residual into
+    it under vmap; the engine's 3-operand Gram form does not."""
     f32 = jnp.float32
     Xa = _aug(X.astype(f32))
     k, p = Wk.shape[0], Xa.shape[1]
@@ -106,20 +125,20 @@ def logistic_fit_folds_w(lam: jax.Array, iters: int, X: jax.Array,
     tt = t.astype(f32)
     n_eff = jnp.maximum(Wk.sum(axis=1), 1.0)                    # (k,)
     lam_eye = lam * jnp.eye(p, dtype=f32)
-    # the gradient mat-vec Σ_n r_kn·Xa_n is read off an augmented Gram
-    # (ones column appended): the 2-operand "kn,np->kp" einsum changes
-    # its reduction order when XLA fuses the elementwise residual into
-    # it under vmap, the 3-operand Gram form does not
-    Za = jnp.concatenate([Xa, jnp.ones((Xa.shape[0], 1), f32)], axis=1)
+    ones = jnp.ones((Xa.shape[0],), f32)
 
     def newton(_, beta):                                        # beta (k, p)
         z = jnp.einsum("kp,np->kn", beta, Xa)
         mu = jax.nn.sigmoid(z)
         s = jnp.clip(mu * (1.0 - mu), 1e-6, None) * Wk
-        Gr = jnp.einsum("ni,kn,nj->kij", Za, Wk * (mu - tt[None, :]), Za)
+        Gr, _ = moments.fold_weighted_gram(
+            Xa, Wk * (mu - tt[None, :]), append=ones,
+            row_block=row_block, rules=rules)
         g = Gr[:, :p, p] / n_eff[:, None] + lam * beta
-        H = jnp.einsum("ni,kn,nj->kij", Xa, s, Xa) \
-            / n_eff[:, None, None] + lam_eye[None]
+        H, _ = moments.fold_weighted_gram(X, s, intercept=True,
+                                          row_block=row_block,
+                                          rules=rules)
+        H = H / n_eff[:, None, None] + lam_eye[None]
         return beta - jax.vmap(det_solve)(H, g)
 
     beta = jax.lax.fori_loop(0, iters, newton, jnp.zeros((k, p), f32))
@@ -142,29 +161,31 @@ def predict_folds_logistic(beta: jax.Array, X: jax.Array) -> jax.Array:
 
 def weighted_theta(ry: jax.Array, rt: jax.Array, phi: jax.Array,
                    w: jax.Array, *, ridge: float = 1e-8,
-                   with_se: bool = True
+                   with_se: bool = True, row_block: int = 0,
+                   rules=None
                    ) -> Tuple[jax.Array, Optional[jax.Array]]:
     """Solve the weighted orthogonal moment
     ``theta = argmin Σ w_i (ry_i - <theta, phi_i> rt_i)²`` and (optionally)
-    its weighted HC0 sandwich stderr.  ry, rt, w: (n,); phi: (n, p_phi)."""
+    its weighted HC0 sandwich stderr.  ry, rt, w: (n,); phi: (n, p_phi).
+
+    Both the augmented Gram and the meat stream through the moments
+    engine: with ``row_block > 0`` neither the (n, p_phi) moment matrix
+    Z nor the residual vector materializes."""
     f32 = jnp.float32
-    ry = ry.astype(f32)
-    rt = rt.astype(f32)
-    w = w.astype(f32)
-    phi = phi.astype(f32)
     p = phi.shape[1]
-    Z = rt[:, None] * phi
-    M = jnp.concatenate([Z, ry[:, None]], axis=1)               # (n, p+1)
-    Gaug = jnp.einsum("ni,n,nj->ij", M, w, M)
-    n_eff = jnp.maximum(w.sum(), 1.0)
+    Gaug, n_eff = moments.residual_weighted_gram(ry, rt, phi, w,
+                                                 row_block=row_block,
+                                                 rules=rules)
+    n_eff = jnp.maximum(n_eff, 1.0)
     A = Gaug[:p, :p] + ridge * n_eff * jnp.eye(p, dtype=f32)
     theta = det_solve(A, Gaug[:p, p])
     if not with_se:
         return theta, None
     # weighted HC0: cov = A⁻¹ (Zᵀ diag(w² e²) Z) A⁻¹ — elementwise resid
     # (no mat-vec: (Z * theta).sum over the tiny p_phi axis is invariant)
-    e = ry - (Z * theta[None, :]).sum(axis=1)
-    meat = jnp.einsum("ni,n,nj->ij", Z, jnp.square(w * e), Z)
+    meat = moments.residual_meat(ry, rt, jnp.zeros_like(ry),
+                                 jnp.zeros_like(rt), phi, theta, w=w,
+                                 row_block=row_block, rules=rules)
     Ainv = det_inv(A)
     cov = jnp.einsum("ia,ab,bj->ij", Ainv, meat, Ainv)
     se = jnp.sqrt(jnp.clip(jnp.diagonal(cov), 0.0, None))

@@ -16,50 +16,44 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import CausalConfig
-from repro.core.crossfit import fold_weights
+from repro.core.crossfit import crossfit_parallel, crossfit_parallel_loo
 from repro.core.final_stage import cate_basis, fit_final_stage
-from repro.core.nuisance import make_logistic, make_ridge
+from repro.core.nuisance import make_nuisance
 
 N_ROWS = 1_048_576  # the paper's "1 Million", padded to 2^20 so rows
 # shard evenly over 256/512 chips (extra rows carry zero weight)
 N_COVARIATES = 500
 
 
-def make_dml_step(cfg: CausalConfig, engine: str = "parallel"):
-    """One full DML fit as a single jittable program.  Fold assignment
-    comes in as data (host-computed, deterministic).
+def make_dml_step(cfg: CausalConfig, engine: str = "parallel",
+                  rules=None):
+    """One full DML fit as a single jittable program, lowering the SAME
+    shared estimation engine the host estimator runs (no inline
+    re-implementation of cross-fitting).  Fold assignment comes in as
+    data (host-computed, deterministic).
 
     engine="parallel"      paper-faithful C1 (vmapped complement fits)
     engine="parallel_loo"  beyond-paper leave-one-out-Gram fast path
+
+    cfg.row_block > 0 streams every moments pass (nuisance normal
+    equations, LOO fold Grams, final stage) in row blocks constrained
+    on the ``rows`` mesh axis — the (k, n) complement-fit activations
+    and the (n, p_phi) final-stage moment matrix never materialize.
     """
-    ridge = make_ridge(cfg.ridge_lambda)
-    logit = make_logistic(cfg.ridge_lambda, cfg.newton_iters)
+    ridge = make_nuisance(cfg.nuisance_y, "reg", cfg)
+    logit = make_nuisance(cfg.nuisance_t,
+                          "clf" if cfg.discrete_treatment else "reg", cfg)
 
     def dml_fit(X, y, t, folds):
         k = cfg.n_folds
         key = jax.random.PRNGKey(0)
-        if engine == "parallel_loo":
-            from repro.core.crossfit import crossfit_parallel_loo
-            my, _ = crossfit_parallel_loo(ridge, key, X, y, folds, k)
-            mt, _ = crossfit_parallel_loo(logit, key, X, t, folds, k)
-        else:
-            W = fold_weights(folds, k)                  # (k, n)
-            keys = jax.random.split(key, k)
-
-            def fit_fold_y(kk, w):
-                st = ridge.fit(ridge.init(kk, X.shape[1]), X, y, w)
-                return ridge.predict(st, X)
-
-            def fit_fold_t(kk, w):
-                st = logit.fit(logit.init(kk, X.shape[1]), X, t, w)
-                return logit.predict(st, X)
-
-            preds_y = jax.vmap(fit_fold_y)(keys, W)      # (k, n) C1 axis
-            preds_t = jax.vmap(fit_fold_t)(keys, W)
-            my = jnp.take_along_axis(preds_y, folds[None, :], 0)[0]
-            mt = jnp.take_along_axis(preds_t, folds[None, :], 0)[0]
+        cf = (crossfit_parallel_loo if engine == "parallel_loo"
+              else crossfit_parallel)
+        my, _ = cf(ridge, key, X, y, folds, k, rules)
+        mt, _ = cf(logit, key, X, t, folds, k, rules)
         phi = cate_basis(X, cfg.cate_features)
-        fs = fit_final_stage(y, t, my, mt, phi)
+        fs = fit_final_stage(y, t, my, mt, phi,
+                             row_block=cfg.row_block, rules=rules)
         return fs.theta, fs.cov
 
     return dml_fit
@@ -89,12 +83,13 @@ def row_sharding(mesh: Mesh) -> Dict[str, NamedSharding]:
 
 def lower_dml_cell(mesh: Mesh, cfg: CausalConfig = None,
                    n: int = N_ROWS, p: int = N_COVARIATES,
-                   engine: str = "parallel"):
+                   engine: str = "parallel", rules=None):
     cfg = cfg or CausalConfig(n_folds=5, cate_features=1)
-    step = make_dml_step(cfg, engine)
+    step = make_dml_step(cfg, engine, rules)
     specs = input_specs(n, p)
     sh = row_sharding(mesh)
-    with jax.set_mesh(mesh):
+    from repro.distributed.sharding import mesh_context
+    with mesh_context(mesh):
         lowered = jax.jit(
             step,
             in_shardings=(sh["X"], sh["y"], sh["t"], sh["folds"]),

@@ -31,6 +31,7 @@ import traceback
 from typing import Any, Dict, Optional
 
 import jax
+from repro.distributed.sharding import mesh_context
 import jax.numpy as jnp
 
 from repro.config import SHAPES, SHAPE_BY_NAME, TrainConfig
@@ -65,7 +66,7 @@ def lower_cell(cell: Cell, mesh, tcfg: Optional[TrainConfig] = None):
         opt_abs = _abstract_opt(model, params_abs)
         opt_sh = _opt_shardings(param_sh, mesh)
         step = make_train_step(model, tcfg)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             lowered = jax.jit(
                 step,
                 in_shardings=(param_sh, opt_sh, input_sh),
@@ -77,7 +78,7 @@ def lower_cell(cell: Cell, mesh, tcfg: Optional[TrainConfig] = None):
         def prefill(params, batch):
             return model.prefill(params, batch)
 
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             lowered = jax.jit(
                 prefill, in_shardings=(param_sh, input_sh),
             ).lower(params_abs, inputs)
@@ -87,7 +88,7 @@ def lower_cell(cell: Cell, mesh, tcfg: Optional[TrainConfig] = None):
     def serve_step(params, tokens, cache, pos):
         return model.decode_step(params, tokens, cache, pos)
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         lowered = jax.jit(
             serve_step,
             in_shardings=(param_sh, input_sh["tokens"], input_sh["cache"],

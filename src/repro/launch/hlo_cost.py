@@ -445,6 +445,23 @@ def _comp_cost(comp: Computation, comps: Dict[str, Computation],
     return memo[comp.name]
 
 
+def peak_temp_bytes(hlo_text: str) -> int:
+    """Largest single non-parameter, non-tuple op output in the module —
+    a cheap proxy for the biggest temporary XLA must materialize.  Used
+    to verify memory claims of streamed programs (e.g. the chunked DML
+    final stage never materializes the dense (n, p_phi) moment matrix:
+    its peak temp is O(row_block · p_phi), while the whole-array path's
+    is O(n · p_phi))."""
+    comps = parse_hlo(hlo_text)
+    peak = 0
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode in _NO_BYTES or op.out_type.startswith("("):
+                continue
+            peak = max(peak, _size_bytes(op.out_type))
+    return peak
+
+
 def analyze(hlo_text: str, world: int = 256) -> CostTotals:
     comps = parse_hlo(hlo_text)
     totals = CostTotals()

@@ -67,6 +67,7 @@ def test_w_controls_are_used(key):
     assert abs(adjusted.ate - 1.0) < 0.1
 
 
+@pytest.mark.slow
 def test_mlp_nuisances(key):
     """Nonlinear confounding needs a nonlinear nuisance."""
     n = 4000

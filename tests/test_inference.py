@@ -86,6 +86,7 @@ def test_replicates_replay_from_base_key(fitted):
                                   np.asarray(r6.replicates)[:3])
 
 
+@pytest.mark.slow
 def test_bootstrap_ci_covers_true_ate():
     """Nominal-rate coverage on causal_dgp draws: the 90% percentile CI
     should cover the true ATE in most of 12 independent studies (exact

@@ -13,6 +13,9 @@ import pytest
 from repro.configs import ARCH_IDS, get_config
 from repro.models.model import build_model
 
+# full-zoo / serving loops: the long tier (PR CI runs -m 'not slow')
+pytestmark = pytest.mark.slow
+
 B, S = 2, 32
 
 

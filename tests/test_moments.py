@@ -1,0 +1,275 @@
+"""Streaming sufficient-statistics engine (repro.core.moments): the
+bit-identity contract between the chunked and whole blocked strategies,
+legacy-form equivalence at row_block=0, estimator invariance across
+row_block settings, and the no-dense-moment-matrix memory claim of the
+chunked final stage."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import CausalConfig
+from repro.core import moments
+from repro.core.dml import DML
+from repro.core.drlearner import DRLearner
+from repro.core.final_stage import cate_basis, fit_final_stage
+from repro.data.causal_dgp import make_causal_data
+
+
+def _rows(key, n, p):
+    ks = jax.random.split(key, 6)
+    X = jax.random.normal(ks[0], (n, p))
+    y = jax.random.normal(ks[1], (n,))
+    w = jax.random.exponential(ks[2], (n,))
+    folds = jax.random.randint(ks[3], (n,), 0, 4)
+    Wk = jax.random.exponential(ks[4], (4, n))
+    t = jax.random.bernoulli(ks[5], 0.5, (n,)).astype(jnp.float32)
+    return X, y, w, folds, Wk, t
+
+
+def _assert_trees_equal(a, b):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# n deliberately NOT divisible by most block sizes: the zero-row padding
+# must be an exact no-op in every accumulator.
+@pytest.mark.parametrize("n,row_block", [
+    (777, 128), (777, 100), (512, 256), (640, 640),
+])
+def test_weighted_gram_chunked_equals_whole(key, n, row_block):
+    X, y, w, *_ = _rows(key, n, 7)
+    out_c = moments.weighted_gram(X, w, intercept=True, append=y,
+                                  row_block=row_block, strategy="chunked")
+    out_w = moments.weighted_gram(X, w, intercept=True, append=y,
+                                  row_block=row_block, strategy="whole")
+    _assert_trees_equal(out_c, out_w)
+
+
+@pytest.mark.parametrize("row_block", [128, 100])
+def test_weighted_gram_chunked_equals_whole_jitted(key, row_block):
+    """Bit-identity must survive XLA fusion, not just eager dispatch."""
+    X, y, w, *_ = _rows(key, 777, 7)
+
+    def run(strategy):
+        return jax.jit(lambda X_, y_, w_: moments.weighted_gram(
+            X_, w_, intercept=True, append=y_, row_block=row_block,
+            strategy=strategy))(X, y, w)
+
+    _assert_trees_equal(run("chunked"), run("whole"))
+
+
+def test_fold_gram_chunked_equals_whole(key):
+    X, y, _, folds, *_ = _rows(key, 1000, 9)
+    out_c = moments.fold_gram(X, folds, 4, intercept=True, append=y,
+                              row_block=192, strategy="chunked")
+    out_w = moments.fold_gram(X, folds, 4, intercept=True, append=y,
+                              row_block=192, strategy="whole")
+    _assert_trees_equal(out_c, out_w)
+    # padded fold ids one-hot to the zero row: counts stay exact
+    np.testing.assert_array_equal(
+        np.asarray(out_c[1]), np.bincount(np.asarray(folds), minlength=4))
+
+
+def test_fold_weighted_gram_chunked_equals_whole(key):
+    X, y, _, _, Wk, _ = _rows(key, 900, 6)
+    out_c = moments.fold_weighted_gram(X, Wk, intercept=True, append=y,
+                                       row_block=256, strategy="chunked")
+    out_w = moments.fold_weighted_gram(X, Wk, intercept=True, append=y,
+                                       row_block=256, strategy="whole")
+    _assert_trees_equal(out_c, out_w)
+
+
+def test_residual_moments_and_meat_chunked_equals_whole(key):
+    n = 1100
+    X, y, w, _, _, t = _rows(key, n, 5)
+    my = 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    mt = jnp.clip(jax.random.uniform(jax.random.fold_in(key, 2), (n,)),
+                  0.1, 0.9)
+    phi = cate_basis(X, 3)
+    a = moments.residual_moments(y, t, my, mt, phi, row_block=256,
+                                 strategy="chunked")
+    b = moments.residual_moments(y, t, my, mt, phi, row_block=256,
+                                 strategy="whole")
+    _assert_trees_equal(a, b)
+    theta = jnp.asarray([1.0, -0.5, 0.2])
+    m_c = moments.residual_meat(y, t, my, mt, phi, theta, w=w,
+                                row_block=256, strategy="chunked")
+    m_w = moments.residual_meat(y, t, my, mt, phi, theta, w=w,
+                                row_block=256, strategy="whole")
+    _assert_trees_equal(m_c, m_w)
+    rw_c = moments.residual_weighted_gram(y - my, t - mt, phi, w,
+                                          row_block=256,
+                                          strategy="chunked")
+    rw_w = moments.residual_weighted_gram(y - my, t - mt, phi, w,
+                                          row_block=256, strategy="whole")
+    _assert_trees_equal(rw_c, rw_w)
+
+
+def test_row_block_zero_is_legacy_forms(key):
+    """row_block=0 must be byte-for-byte the legacy whole-array einsums
+    (this anchors serial == vmap bit-identity in repro.inference)."""
+    X, y, w, _, Wk, _ = _rows(key, 500, 6)
+    f32 = jnp.float32
+    Xa = jnp.concatenate([X.astype(f32), jnp.ones((500, 1), f32)], axis=1)
+    Z = jnp.concatenate([Xa, y.astype(f32)[:, None]], axis=1)
+    G, n_eff = moments.weighted_gram(X, w, intercept=True, append=y)
+    np.testing.assert_array_equal(
+        np.asarray(G), np.asarray(jnp.einsum("ni,n,nj->ij", Z,
+                                             w.astype(f32), Z)))
+    np.testing.assert_array_equal(np.asarray(n_eff),
+                                  np.asarray(w.astype(f32).sum()))
+    Gk, n_k = moments.fold_weighted_gram(X, Wk, intercept=True, append=y)
+    np.testing.assert_array_equal(
+        np.asarray(Gk), np.asarray(jnp.einsum("ni,kn,nj->kij", Z,
+                                              Wk.astype(f32), Z)))
+    np.testing.assert_array_equal(np.asarray(n_k),
+                                  np.asarray(Wk.astype(f32).sum(axis=1)))
+
+
+def test_final_stage_chunked_equals_whole_bitwise(key):
+    n = 2048
+    d = make_causal_data(jax.random.PRNGKey(7), n, 6, effect=1.0)
+    my = 0.2 * d.y
+    mt = jnp.full((n,), 0.5, jnp.float32)
+    phi = cate_basis(d.X, 2)
+    fc = fit_final_stage(d.y, d.t, my, mt, phi, row_block=256,
+                         strategy="chunked")
+    fw = fit_final_stage(d.y, d.t, my, mt, phi, row_block=256,
+                         strategy="whole")
+    np.testing.assert_array_equal(np.asarray(fc.theta), np.asarray(fw.theta))
+    np.testing.assert_array_equal(np.asarray(fc.cov), np.asarray(fw.cov))
+
+
+@pytest.mark.parametrize("row_block", [192, 512])
+def test_dml_estimates_invariant_across_row_block(key, row_block):
+    """Property: the estimator is row_block-invariant up to float
+    reassociation — same data, same folds, same answer."""
+    d = make_causal_data(jax.random.PRNGKey(3), 3000, 8, effect=1.0)
+    r0 = DML(CausalConfig(n_folds=4)).fit(d.y, d.t, d.X, key=key)
+    rb = DML(CausalConfig(n_folds=4, row_block=row_block)).fit(
+        d.y, d.t, d.X, key=key)
+    np.testing.assert_allclose(np.asarray(r0.theta), np.asarray(rb.theta),
+                               rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(r0.stderr), np.asarray(rb.stderr),
+                               rtol=2e-3, atol=2e-6)
+
+
+def test_dml_loo_engine_invariant_across_row_block(key):
+    d = make_causal_data(jax.random.PRNGKey(5), 2500, 6, effect=1.0)
+    r0 = DML(CausalConfig(n_folds=4, engine="parallel_loo")).fit(
+        d.y, d.t, d.X, key=key)
+    rb = DML(CausalConfig(n_folds=4, engine="parallel_loo",
+                          row_block=300)).fit(d.y, d.t, d.X, key=key)
+    np.testing.assert_allclose(np.asarray(r0.theta), np.asarray(rb.theta),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_drlearner_invariant_across_row_block(key):
+    d = make_causal_data(jax.random.PRNGKey(9), 2500, 6, effect=1.0)
+    r0 = DRLearner(CausalConfig(n_folds=3, inference="none")).fit(
+        d.y, d.t, d.X, key=key)
+    rb = DRLearner(CausalConfig(n_folds=3, inference="none",
+                                row_block=256)).fit(d.y, d.t, d.X, key=key)
+    assert abs(r0.ate - rb.ate) < 1e-3
+    np.testing.assert_allclose(np.asarray(r0.theta), np.asarray(rb.theta),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_bootstrap_serial_vmap_bit_identical_chunked(key):
+    """The executor bit-identity contract survives row blocking: the
+    chunked moments passes are built from the same invariant einsum
+    vocabulary, and scan commutes with the replicate vmap."""
+    from repro.core.nuisance import make_logistic, make_ridge
+    from repro.inference import dml_bootstrap
+    d = make_causal_data(jax.random.PRNGKey(11), 1500, 6, effect=1.0)
+    phi = cate_basis(d.X, 2)
+    kw = dict(n_folds=3, XW=d.X, y=d.y, t=d.t, phi=phi,
+              key=jax.random.PRNGKey(2), n_replicates=4, row_block=256)
+    ny = make_ridge(1e-3, row_block=256)
+    nt = make_logistic(1e-3, 8, row_block=256)
+    r_ser = dml_bootstrap(ny, nt, executor="serial", **kw)
+    r_vec = dml_bootstrap(ny, nt, executor="vmap", **kw)
+    np.testing.assert_array_equal(np.asarray(r_ser.replicates),
+                                  np.asarray(r_vec.replicates))
+
+
+def test_jackknife_segmented_matches_direct_weighted_fit(key):
+    """The LOO-identity jackknife (G_total - G_fold) must agree with
+    re-solving each delete-fold weighted moment directly."""
+    from repro.core.crossfit import fold_ids
+    from repro.inference import delete_fold_jackknife
+    from repro.inference.numerics import weighted_theta
+    n, k = 2000, 4
+    d = make_causal_data(jax.random.PRNGKey(13), n, 6, effect=1.0)
+    my = 0.1 * d.y
+    mt = jnp.full((n,), 0.5, jnp.float32)
+    folds = fold_ids(key, n, k)
+    phi = cate_basis(d.X, 2)
+    jk = delete_fold_jackknife(d.y, d.t, my, mt, folds, phi, k)
+    ry = d.y - my
+    rt = d.t - mt
+    direct = jnp.stack([
+        weighted_theta(ry, rt, phi,
+                       (folds != j).astype(jnp.float32),
+                       with_se=False)[0]
+        for j in range(k)])
+    np.testing.assert_allclose(np.asarray(jk.replicates),
+                               np.asarray(direct), rtol=1e-4, atol=1e-5)
+    # row-blocked segmented pass agrees too
+    jk_rb = delete_fold_jackknife(d.y, d.t, my, mt, folds, phi, k,
+                                  row_block=300)
+    np.testing.assert_allclose(np.asarray(jk_rb.replicates),
+                               np.asarray(jk.replicates),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_final_stage_chunked_has_no_dense_moment_matrix():
+    """Acceptance: the chunked final stage never materializes the dense
+    (n, p_phi) moment matrix — verified on the post-optimization HLO
+    via launch.hlo_cost's peak-temp check."""
+    from repro.launch.hlo_cost import peak_temp_bytes
+    n, p_phi = 8192, 4
+    f32 = jnp.float32
+    args = [jax.ShapeDtypeStruct((n,), f32)] * 4 + [
+        jax.ShapeDtypeStruct((n, p_phi), f32)]
+
+    def lower(row_block):
+        def f(y, t, my, mt, phi):
+            fs = fit_final_stage(y, t, my, mt, phi, row_block=row_block)
+            return fs.theta, fs.cov
+        return jax.jit(f).lower(*args).compile().as_text()
+
+    dense_z_bytes = n * p_phi * 4
+    peak_chunked = peak_temp_bytes(lower(512))
+    peak_whole = peak_temp_bytes(lower(0))
+    assert peak_chunked < dense_z_bytes, (peak_chunked, dense_z_bytes)
+    assert peak_whole >= dense_z_bytes, (peak_whole, dense_z_bytes)
+
+
+def test_crossfit_engines_route_through_executor(key):
+    """crossfit dispatch accepts Executor instances and names — fold
+    fits share the Executor protocol with trials and replicates."""
+    from repro.core.crossfit import crossfit
+    from repro.core.nuisance import make_logistic, make_ridge
+    from repro.inference import SerialExecutor
+    d = make_causal_data(jax.random.PRNGKey(17), 1200, 5, effect=1.0)
+    ny, nt = make_ridge(1e-3), make_logistic(1e-3, 8)
+    cf_v = crossfit(ny, nt, key, d.X, d.y, d.t, 3, engine="parallel")
+    cf_e = crossfit(ny, nt, key, d.X, d.y, d.t, 3,
+                    engine=SerialExecutor())
+    np.testing.assert_allclose(np.asarray(cf_v.oof_y),
+                               np.asarray(cf_e.oof_y), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_halving_trial_closure_is_stable():
+    """The _JitCache fix: the same (task, hidden, steps) rung must hand
+    the executor the SAME closure object (a fresh lambda per rung used
+    to re-trace every rung)."""
+    from repro.core.tuning import _halving_trial_fn
+    a = _halving_trial_fn("reg", (16,), 30)
+    b = _halving_trial_fn("reg", (16,), 30)
+    assert a is b
+    assert _halving_trial_fn("reg", (16,), 60) is not a

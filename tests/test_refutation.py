@@ -40,6 +40,7 @@ def test_subset_stable(setup):
     assert rep.passed
 
 
+@pytest.mark.slow
 def test_run_all_report(setup):
     data, _, _ = setup
     reports = refutation.run_all(CausalConfig(n_folds=3), data.y, data.t,

@@ -16,6 +16,9 @@ from repro.launch.train import make_train_step
 from repro.models.model import build_model
 from repro.optim.adamw import adamw_init
 
+# full-zoo / serving loops: the long tier (PR CI runs -m 'not slow')
+pytestmark = pytest.mark.slow
+
 
 def test_training_reduces_loss(key):
     cfg = dataclasses.replace(get_config("granite-3-2b-smoke"),
