@@ -17,7 +17,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.config import CausalConfig
 from repro.core.dml import DML

@@ -11,7 +11,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
-from typing import Dict, List
+from typing import Dict
 
 DEFAULT = os.path.join(os.path.dirname(__file__), "results",
                        "dryrun_final.jsonl")

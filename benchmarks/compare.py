@@ -1,0 +1,92 @@
+"""Bench-regression gate: compare a BENCH_results.json run against the
+committed BENCH_baseline.json and fail on slowdowns past the threshold.
+
+Only entries whose name starts with a gated prefix participate
+(crossfit / bootstrap / final_stage — the perf wins of PRs 1-3 this
+gate locks in); other entries are informational.  A gated baseline
+entry MISSING from the new results also fails: silently dropping a
+benchmark is how regressions hide.
+
+Baselines are machine-specific: absolute us_per_call tracks the host
+that recorded it.  When CI runner hardware shifts, regenerate the
+baseline from the bench-gate job's uploaded BENCH_results.json artifact
+(commit it as BENCH_baseline.json) rather than widening the threshold.
+
+Usage:
+    python benchmarks/compare.py BENCH_baseline.json BENCH_results.json \
+        [--threshold 1.20] [--prefixes crossfit,bootstrap,final_stage]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATED_PREFIXES = ("crossfit", "bootstrap", "final_stage")
+
+
+def load_entries(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {e["name"]: float(e["us_per_call"]) for e in payload["entries"]}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("results")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=1.20,
+        help="fail when new/old exceeds this (1.20 = +20%%)",
+    )
+    ap.add_argument(
+        "--prefixes",
+        default=",".join(GATED_PREFIXES),
+        help="comma-separated gated name prefixes",
+    )
+    args = ap.parse_args(argv)
+
+    base = load_entries(args.baseline)
+    new = load_entries(args.results)
+    prefixes = tuple(p for p in args.prefixes.split(",") if p)
+
+    failures = []
+    print(f"{'benchmark':<42} {'base_us':>12} {'new_us':>12} {'ratio':>7}")
+    for name in sorted(base):
+        if not name.startswith(prefixes):
+            continue
+        if name not in new:
+            failures.append(f"{name}: missing from results")
+            print(f"{name:<42} {base[name]:>12.0f} {'MISSING':>12}")
+            continue
+        ratio = new[name] / max(base[name], 1e-9)
+        flag = " <-- REGRESSION" if ratio > args.threshold else ""
+        print(
+            f"{name:<42} {base[name]:>12.0f} {new[name]:>12.0f} "
+            f"{ratio:>6.2f}x{flag}"
+        )
+        if ratio > args.threshold:
+            failures.append(f"{name}: {ratio:.2f}x > {args.threshold:.2f}x")
+
+    extra = sorted(n for n in new if n.startswith(prefixes) and n not in base)
+    for name in extra:
+        print(f"{name:<42} {'(new)':>12} {new[name]:>12.0f}")
+
+    if failures:
+        print(
+            f"\nFAIL: {len(failures)} gated benchmark(s) regressed "
+            f"beyond {args.threshold:.2f}x:",
+            file=sys.stderr,
+        )
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"\nOK: all gated benchmarks within {args.threshold:.2f}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,7 +4,6 @@ from __future__ import annotations
 
 import json
 import os
-import sys
 
 HERE = os.path.dirname(__file__)
 SRC = os.path.join(HERE, "results", "dryrun_final.jsonl")

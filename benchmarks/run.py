@@ -10,8 +10,18 @@ from __future__ import annotations
 
 import argparse
 import json
+import pathlib
 import platform
+import sys
 import time
+
+# make `python benchmarks/run.py` work from any cwd: the repo root
+# provides the `benchmarks` package, src/ provides `repro` when the
+# package isn't pip-installed
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+for _p in (str(_ROOT), str(_ROOT / "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 class Recorder:
@@ -43,6 +53,10 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-exact scales (1M x 500; slow on CPU)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced fixed-size subset for the CI "
+                         "bench-gate: crossfit/inference/final_stage/"
+                         "runtime only, minutes not tens of minutes")
     ap.add_argument("--json", default="BENCH_results.json",
                     help="output path for the standardized bench JSON "
                          "('' disables)")
@@ -57,17 +71,22 @@ def main(argv=None):
     if args.full:
         bench_crossfit.run(sizes=(10_000, 100_000, 1_000_000), p=500,
                            csv=rec)
+    elif args.smoke:
+        bench_crossfit.run(sizes=(5_000, 10_000), p=20, csv=rec)
     else:
         bench_crossfit.run(sizes=(10_000, 30_000, 100_000), p=50, csv=rec)
 
-    print("# --- paper Fig. 5 / 5.2: distributed tuning ---")
-    from benchmarks import bench_tuning
-    bench_tuning.run(n=20_000, p=50, n_trials=8, n_folds=5, csv=rec)
+    if not args.smoke:
+        print("# --- paper Fig. 5 / 5.2: distributed tuning ---")
+        from benchmarks import bench_tuning
+        bench_tuning.run(n=20_000, p=50, n_trials=8, n_folds=5, csv=rec)
 
     print("# --- bootstrap inference: serial vs batched executor ---")
     from benchmarks import bench_inference
     if args.full:
         bench_inference.run(sizes=(10_000, 100_000), p=500, B=200, csv=rec)
+    elif args.smoke:
+        bench_inference.run(sizes=(5_000,), p=20, B=16, csv=rec)
     else:
         bench_inference.run(sizes=(5_000, 10_000), p=20, B=32, csv=rec)
 
@@ -79,13 +98,21 @@ def main(argv=None):
     else:
         bench_final_stage.run(csv=rec)
 
-    print("# --- kernel micro-benchmarks ---")
-    from benchmarks import bench_kernels
-    bench_kernels.main(csv=rec)
+    print("# --- task runtime: memory-budgeted chunked scheduling ---")
+    from benchmarks import bench_runtime
+    if args.smoke:
+        bench_runtime.run(B=200, csv=rec)
+    else:
+        bench_runtime.run(B=2000, csv=rec)
 
-    print("# --- multi-pod dry-run roofline (deliverable e/g) ---")
-    from benchmarks import bench_dryrun
-    bench_dryrun.main([], csv=rec)
+    if not args.smoke:
+        print("# --- kernel micro-benchmarks ---")
+        from benchmarks import bench_kernels
+        bench_kernels.main(csv=rec)
+
+        print("# --- multi-pod dry-run roofline (deliverable e/g) ---")
+        from benchmarks import bench_dryrun
+        bench_dryrun.main([], csv=rec)
 
     if args.json:
         import jax
@@ -95,6 +122,7 @@ def main(argv=None):
                 "unix_time": int(t0),
                 "wall_seconds": round(time.time() - t0, 1),
                 "full": bool(args.full),
+                "smoke": bool(args.smoke),
                 "backend": jax.default_backend(),
                 "platform": platform.platform(),
             },

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from repro.config import CausalConfig
 from repro.configs import get_config
 from repro.core.dml import DML
-from repro.core.nuisance import backbone_features, make_nuisance
+from repro.core.nuisance import backbone_features
 from repro.models.model import build_model
 
 ap = argparse.ArgumentParser()

@@ -17,7 +17,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config
 from repro.data.lm_data import bigram_ce_floor, lm_batch
 from repro.data.pipeline import ShardedFeed, batch_sharding
-from repro.launch.elastic import elastic_restore, state_template
+from repro.launch.elastic import elastic_restore
 from repro.launch.mesh import make_host_mesh
 from repro.launch.train import TrainState, train_loop
 from repro.models.model import build_model

@@ -7,7 +7,7 @@ functions and used as cache keys by the dry-run machinery.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax.numpy as jnp
 
@@ -255,6 +255,14 @@ class CausalConfig:
     n_bootstrap: int = 200        # B replicates (EconML BootstrapInference)
     alpha: float = 0.05           # CI level: 1 - alpha
     inference_executor: str = "vmap"  # serial | vmap | shard_map
+    # --- task-graph runtime (repro.runtime) ---
+    # Per-device peak-memory budget (bytes) for replicate batching: the
+    # scheduler probes the lowered closure (launch.hlo_cost peak temps)
+    # and streams the replicate axis in chunks that fit.  0 = unbounded
+    # (one batched program, the legacy behavior).
+    runtime_memory_budget: int = 0
+    runtime_chunk: int = 0        # explicit chunk size; 0 = auto from budget
+    runtime_max_retries: int = 2  # per-chunk backend-downgrade attempts
 
 
 def smoke_variant(cfg: ModelConfig, **overrides: Any) -> ModelConfig:

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,14 +71,16 @@ def _crossfit_engine(nuis: Nuisance, keys: jax.Array, X: jax.Array,
                      target: jax.Array, folds: jax.Array, k: int,
                      rules, executor) -> Tuple[jax.Array, Any]:
     """The shared fold-fit dispatch: the fold axis (init keys + fold-
-    complement weights) maps through an Executor, so fold fits, tuning
-    trials, and bootstrap replicates all run through one "how iterative
-    steps run" knob."""
-    from repro.inference.executor import make_executor
-    exe = make_executor(executor, rules=rules)
+    complement weights) maps through the task runtime, so fold fits,
+    tuning trials, and bootstrap replicates all run through one "how
+    iterative steps run" knob — with the runtime's chunking and
+    backend-downgrade ladder available to the fold axis too (pass a
+    TaskRuntime as ``executor`` to set a budget)."""
+    from repro.runtime import as_runtime
+    rt = as_runtime(executor, rules=rules)
     W = fold_weights(folds, k)                      # (k, n)
-    preds, states = exe.map(_fold_fit_fn(nuis), {"key": keys, "w": W},
-                            X, target)
+    preds, states = rt.map(_fold_fit_fn(nuis), {"key": keys, "w": W},
+                           X, target, label="crossfit")
     preds = constrain(preds, ("fold", "batch"), rules)
     return _oof_select(preds, folds), states
 

@@ -104,13 +104,16 @@ class DMLResult:
         if cache_key in self._inf_cache:
             return self._inf_cache[cache_key]
         ctx = self.fit_ctx
+        rt_kw = dict(memory_budget=self.cfg.runtime_memory_budget,
+                     chunk=self.cfg.runtime_chunk,
+                     max_retries=self.cfg.runtime_max_retries)
         if method == "jackknife":
             cf = self.crossfit
             res = delete_fold_jackknife(
                 ctx.y, ctx.t, cf.oof_y, cf.oof_t, cf.folds, ctx.phi,
                 self.cfg.n_folds, alpha=a, executor=exe,
                 point=self.theta, point_se=self.stderr, rules=ctx.rules,
-                row_block=self.cfg.row_block)
+                row_block=self.cfg.row_block, **rt_kw)
         else:
             scheme = "pairs" if method == "bootstrap" else method
             res = dml_bootstrap(
@@ -119,7 +122,7 @@ class DMLResult:
                 key=jax.random.fold_in(ctx.key, 0x0b00), alpha=a,
                 n_replicates=n_boot, scheme=scheme, executor=exe,
                 point=self.theta, point_se=self.stderr, rules=ctx.rules,
-                row_block=self.cfg.row_block)
+                row_block=self.cfg.row_block, **rt_kw)
         self._inf_cache[cache_key] = res
         return res
 

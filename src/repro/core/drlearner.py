@@ -78,7 +78,10 @@ class DRResult:
             key=jax.random.fold_in(ctx["key"], 0x0b00), alpha=a,
             n_replicates=n_boot, scheme=scheme, executor=exe,
             clip=ctx["clip"], point=self.theta, ate_point=self.ate,
-            row_block=cfg.row_block)
+            row_block=cfg.row_block,
+            memory_budget=cfg.runtime_memory_budget,
+            chunk=cfg.runtime_chunk,
+            max_retries=cfg.runtime_max_retries)
         self._inf_cache[ck] = res
         return res
 

@@ -28,7 +28,7 @@ EconML's ``StatsModelsLinearRegression`` final stage.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.config import CausalConfig
 from repro.core.nuisance import Nuisance, make_logistic, make_ridge
 
 

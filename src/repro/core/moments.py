@@ -54,7 +54,6 @@ tolerances, not bitwise.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Optional, Sequence, Tuple
 
 import jax

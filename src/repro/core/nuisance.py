@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.config import CausalConfig
 from repro.core import moments
-from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.adamw import adamw_init, adamw_update
 from repro.config import TrainConfig
 
 

@@ -25,7 +25,7 @@ program.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +34,7 @@ from repro.config import CausalConfig
 from repro.core.dml import DML
 from repro.core.final_stage import cate_basis
 from repro.inference.bootstrap import dml_theta_once, replicate_keys
-from repro.inference.executor import make_executor
+from repro.runtime import as_runtime
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,8 +67,9 @@ class RefutationReport:
 
 def _run_replicates(est: DML, fn, key, n_reps: int, executor, y, t, X,
                     phi) -> Tuple[float, ...]:
-    exe = make_executor(executor, rules=est.rules)
-    thetas = exe.map(fn, replicate_keys(key, n_reps), y, t, X, phi)["theta"]
+    rt = as_runtime(executor, rules=est.rules)
+    thetas = rt.map(fn, replicate_keys(key, n_reps), y, t, X, phi,
+                    label="refute")["theta"]
     return tuple(float(a) for a in thetas[:, 0])
 
 
@@ -130,15 +131,25 @@ def data_subset(est: DML, y, t, X, *, original_ate: float,
 
 def run_all(cfg: CausalConfig, y, t, X, *, key=None, executor="vmap"
             ) -> Tuple[RefutationReport, ...]:
+    """The refuter panel on ONE shared task runtime (configured from
+    cfg.runtime_*): the three refuters are independent branches of a
+    task graph gathered together, each branch's replicate map going
+    through the same chunked, fault-tolerant scheduler."""
     key = key if key is not None else jax.random.PRNGKey(0)
     est = DML(cfg)
     base = est.fit(y, t, X, key=key)
     a0 = base.ate
-    return (
-        placebo_treatment(est, y, t, X, original_ate=a0, key=key,
-                          executor=executor),
-        random_common_cause(est, y, t, X, original_ate=a0, key=key,
-                            executor=executor),
-        data_subset(est, y, t, X, original_ate=a0, key=key,
-                    executor=executor),
-    )
+    rt = as_runtime(executor, rules=est.rules,
+                    memory_budget=cfg.runtime_memory_budget,
+                    chunk=cfg.runtime_chunk,
+                    max_retries=cfg.runtime_max_retries)
+    p = rt.call(lambda: placebo_treatment(
+        est, y, t, X, original_ate=a0, key=key, executor=rt),
+        label="placebo_treatment")
+    r = rt.call(lambda: random_common_cause(
+        est, y, t, X, original_ate=a0, key=key, executor=rt),
+        label="random_common_cause")
+    d = rt.call(lambda: data_subset(
+        est, y, t, X, original_ate=a0, key=key, executor=rt),
+        label="data_subset")
+    return tuple(rt.gather([p, r, d]))

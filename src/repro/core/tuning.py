@@ -8,13 +8,14 @@ tasks.  For budgeted search, ``successive_halving`` implements the
 ASHA-style rung schedule on top (per-rung survivor sets are plain
 arrays, so a preempted sweep resumes from the last rung — DESIGN §7).
 
-The replicate axis (trials for the grid, folds inside a halving rung)
-is dispatched through ``repro.inference.executor`` — the same pluggable
-Executor that schedules §5.1 fold fits and bootstrap replicates — so
-"how iterative steps run" is one swappable choice across all three
+The (trial × fold) grid is dispatched through ``repro.runtime`` — the
+same task scheduler that runs §5.1 fold fits and bootstrap replicates —
+so "how iterative steps run" is one swappable choice across all three
 paper-parallelized step classes: ``vmap`` (default) batches the sweep
-into one program, ``serial`` is the Ray-less loop baseline, and
-``shard_map`` spreads the axis over the device mesh.
+into one program, ``serial`` is the Ray-less loop baseline,
+``shard_map`` spreads the axis over the device mesh, and a TaskRuntime
+with a memory budget streams it in chunks.  ``successive_halving``'s
+rung schedule is a dependent task graph on the runtime's futures.
 
 Scores are out-of-fold (cross-validated) losses: MSE for regression,
 log-loss for classification — the same objective Ray Tune's scikit-learn
@@ -24,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +33,7 @@ import jax.numpy as jnp
 from repro.config import CausalConfig
 from repro.core.crossfit import fold_ids, fold_weights, _oof_select
 from repro.core.nuisance import Nuisance, make_mlp, make_logistic, make_ridge
-from repro.inference.executor import make_executor
+from repro.runtime import TaskFuture, as_runtime
 
 
 def _oof_score(preds_kn: jax.Array, folds: jax.Array, target: jax.Array,
@@ -59,32 +60,56 @@ class TuneResult:
 # the full (T trials × K folds) grid.
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=None)
+def _penalty_cell_fn(task: str, newton_iters: int):
+    """Stable per-(task, iters) closure for ONE (trial, fold) cell of
+    the grid — the unit the scheduler's nested parallelism batches.
+    Returns the cell's *summed held-out loss* (a scalar), so the mapped
+    output is (T, K) — never a (T, K, n) prediction tensor — and the
+    fold-weight matrix rides as ONE shared pass-through arg indexed by
+    fold id instead of being tiled T times.  Cached so repeated tune
+    calls hand the runtime the same object (compiled-program caches are
+    keyed on it)."""
+    make = make_logistic if task == "clf" else make_ridge
+    proto = make(1.0) if task != "clf" else make(1.0, newton_iters)
+
+    def cell(lam, j, X, target, W, folds, st0):
+        st = proto.fit({**st0, "lam": lam}, X, target, W[j])
+        pred = proto.predict(st, X)
+        yt = target.astype(jnp.float32)
+        if task == "clf":
+            p = jnp.clip(pred, 1e-6, 1 - 1e-6)
+            loss = -(yt * jnp.log(p) + (1 - yt) * jnp.log(1 - p))
+        else:
+            loss = jnp.square(pred - yt)
+        mask = (folds == j).astype(jnp.float32)   # this cell's held-out rows
+        return (mask * loss).sum()
+
+    return proto, cell
+
+
 def tune_penalty(task: str, lams: jax.Array, X: jax.Array, target: jax.Array,
                  *, n_folds: int = 5, key: Optional[jax.Array] = None,
                  newton_iters: int = 16, executor="vmap") -> TuneResult:
     key = key if key is not None else jax.random.PRNGKey(0)
     folds = fold_ids(key, X.shape[0], n_folds)
     W = fold_weights(folds, n_folds)
-    make = make_logistic if task == "clf" else make_ridge
-    proto = make(1.0) if task == "reg" else make(1.0, newton_iters)
-    exe = make_executor(executor)
+    proto, cell = _penalty_cell_fn(task, newton_iters)
+    rt = as_runtime(executor)
 
-    # (T, K, n) predictions: the trial axis is the C2 population axis,
-    # dispatched through the executor (vmap => one double-batched
-    # program, exactly Ray Tune's trial pool as SPMD); folds stay
-    # vmapped inside each trial.  Data tensors ride as pass-through
-    # executor args (compiled-program inputs, not baked constants).
-    def trial(lam, X_, target_, W_, folds_):
-        st0 = proto.init(key, X_.shape[1])
-
-        def one_fold(w):
-            st = proto.fit({**st0, "lam": lam}, X_, target_, w)
-            return proto.predict(st, X_)
-
-        preds = jax.vmap(one_fold)(W_)                      # (K, n)
-        return _oof_score(preds, folds_, target_, task)
-
-    scores = exe.map(trial, lams, X, target, W, folds)
+    # the (trial × fold) grid is ONE batched program chosen by the
+    # scheduler (runtime.map_product flattens the product onto a single
+    # replicate axis — Ray Tune's trial pool AND the fold pool as one
+    # SPMD dispatch, chunked if a budget demands).  Mapped inputs are
+    # scalars (lam, fold id); data tensors ride as pass-through args
+    # (compiled-program inputs, not baked constants); init is
+    # lam-independent so one st0 serves the whole grid.  Summing the
+    # (T, K) per-fold partial losses reproduces the OOF score: every
+    # row's loss enters exactly once, under its held-out fold's model.
+    st0 = proto.init(key, X.shape[1])
+    cells = rt.map_product(cell, lams, jnp.arange(n_folds), X, target,
+                           W, folds, st0, label="tune_penalty")
+    scores = cells.sum(axis=1) / X.shape[0]                    # (T,)
     best = int(jnp.argmin(scores))
     return TuneResult(best_index=best, best_value=float(lams[best]),
                       best_score=float(scores[best]), scores=scores,
@@ -128,36 +153,53 @@ def successive_halving(task: str, lrs: jax.Array, X: jax.Array,
                        hidden: Tuple[int, ...] = (64,),
                        key: Optional[jax.Array] = None,
                        executor="vmap") -> HalvingResult:
+    """ASHA-style rung schedule expressed as a *dependent task graph*:
+    rung r's map task scores the survivors, a host call task selects
+    the top 1/eta, and rung r+1's map task consumes that future — the
+    whole schedule is submitted up front (survivor-set SIZES are
+    deterministic, so the graph is static) and one ``gather`` drives
+    it in topological order.  This is Ray Tune's ASHA dependency
+    structure on the runtime's futures instead of a hand-ordered
+    loop."""
     key = key if key is not None else jax.random.PRNGKey(0)
     folds = fold_ids(key, X.shape[0], n_folds)
     W = fold_weights(folds, n_folds)
-    survivors = jnp.arange(lrs.shape[0])
-    history = []
+    history: list = []
     steps = base_steps
-    exe = make_executor(executor)
+    rt = as_runtime(executor)
     # init is lr-independent: one state serves every trial and rung
     st0 = make_mlp(task, hidden=hidden, steps=base_steps).init(
         key, X.shape[1])
+
+    def _select(rung: int, steps_: int, keep: int):
+        def select(cur, scores):
+            order = jnp.argsort(scores)
+            history.append({"rung": rung, "steps": steps_,
+                            "lrs": cur.tolist(),
+                            "scores": [float(s) for s in scores],
+                            "kept": [float(cur[i]) for i in order[:keep]]})
+            return cur[order[:keep]]
+        return select
+
+    cur: Any = lrs                      # plain array, then futures
+    n_live = int(lrs.shape[0])
     for rung in range(rungs):
-        cur = lrs[survivors]
-        # the trial axis goes through the executor (C2's population
-        # axis): the whole rung is one dispatched map over lr values;
-        # only a change of ``steps`` (the static scan length) can ever
-        # force a new trace, and the closure cache is keyed on it.
+        # one map task per rung over the surviving lr values; only a
+        # change of ``steps`` (the static scan length) can ever force a
+        # new trace, and the closure cache is keyed on it.
         trial = _halving_trial_fn(task, tuple(hidden), steps)
-        scores = exe.map(trial, cur, X, target, W, folds, st0)
-        order = jnp.argsort(scores)
-        keep = max(1, len(survivors) // eta)
-        history.append({"rung": rung, "steps": steps,
-                        "lrs": cur.tolist(),
-                        "scores": [float(s) for s in scores],
-                        "kept": [float(cur[i]) for i in order[:keep]]})
-        survivors = survivors[order[:keep]]
+        scores = rt.submit(trial, cur, X, target, W, folds, st0,
+                           label=f"halving_rung{rung}")
+        keep = max(1, n_live // eta)
+        cur = rt.call(_select(rung, steps, keep), cur, scores,
+                      label=f"halving_select{rung}")
+        n_live = keep
         steps *= eta
-        if len(survivors) == 1:
+        if n_live == 1:
             break
-    return HalvingResult(best_lr=float(lrs[survivors[0]]),
-                         history=tuple(history))
+    # rungs <= 0 builds no graph: cur is still the plain lrs array
+    final = rt.gather(cur) if isinstance(cur, TaskFuture) else cur
+    return HalvingResult(best_lr=float(final[0]), history=tuple(history))
 
 
 def tuned_nuisances(cfg: CausalConfig, X, y, t, key) -> Tuple[Nuisance, Nuisance]:

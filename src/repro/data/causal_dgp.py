@@ -14,7 +14,6 @@ same data — the SPMD translation of Ray's lineage).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ eps·ln V + H(eps)), and (iii) generated on-host in O(batch) with no I/O.
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ import threading
 from typing import Callable, Dict, Iterator, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 

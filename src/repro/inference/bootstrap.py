@@ -16,14 +16,13 @@ lineage-based reconstruction.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.crossfit import _oof_select, fold_ids, fold_weights
 from repro.core.nuisance import Nuisance
-from repro.inference.executor import Executor, make_executor
 from repro.inference.intervals import InferenceResult
 from repro.inference.numerics import (logistic_fit_folds_w,
                                       predict_folds_linear,
@@ -148,18 +147,25 @@ def dml_bootstrap(nuis_y: Nuisance, nuis_t: Nuisance, *, n_folds: int,
                   point: Optional[jax.Array] = None,
                   point_se: Optional[jax.Array] = None,
                   mesh=None, rules=None,
-                  row_block: int = 0) -> InferenceResult:
-    """B weighted DML refits through the executor -> InferenceResult."""
-    exe = make_executor(executor, mesh=mesh, rules=rules)
+                  row_block: int = 0, memory_budget: int = 0,
+                  chunk: int = 0, max_retries: int = 2) -> InferenceResult:
+    """B weighted DML refits scheduled by the task runtime: the
+    replicate axis streams in memory-budgeted chunks (repro.runtime),
+    each chunk retrying down the backend ladder on failure — results
+    are replicate-ordered and bit-identical across all of it."""
+    from repro.runtime import as_runtime
+    rt = as_runtime(executor, mesh=mesh, rules=rules,
+                    memory_budget=memory_budget, chunk=chunk,
+                    max_retries=max_retries)
     keys = replicate_keys(key, n_replicates)
     replicate = make_dml_replicate_fn(nuis_y, nuis_t, n_folds,
                                       scheme=scheme, with_se=with_se,
                                       row_block=row_block)
-    out = exe.map(replicate, keys, XW, y, t, phi)
+    out = rt.map(replicate, keys, XW, y, t, phi, label="dml_bootstrap")
     thetas = out["theta"]
     se = jnp.std(thetas, axis=0, ddof=1)
     return InferenceResult(
-        method=scheme, executor=exe.name,
+        method=scheme, executor=rt.name,
         point=thetas.mean(axis=0) if point is None else point,
         replicates=thetas, se=se, alpha=alpha, point_se=point_se,
         replicate_se=out.get("se"))
@@ -214,9 +220,14 @@ def dr_bootstrap(outcome: Nuisance, propensity: Nuisance, *, n_folds: int,
                  point_se: Optional[jax.Array] = None,
                  ate_point: Optional[float] = None,
                  mesh=None, rules=None,
-                 row_block: int = 0) -> InferenceResult:
-    """B weighted AIPW refits through the executor -> InferenceResult."""
-    exe = make_executor(executor, mesh=mesh, rules=rules)
+                 row_block: int = 0, memory_budget: int = 0,
+                 chunk: int = 0, max_retries: int = 2) -> InferenceResult:
+    """B weighted AIPW refits through the task runtime (same chunked,
+    fault-tolerant scheduling as dml_bootstrap)."""
+    from repro.runtime import as_runtime
+    rt = as_runtime(executor, mesh=mesh, rules=rules,
+                    memory_budget=memory_budget, chunk=chunk,
+                    max_retries=max_retries)
     keys = replicate_keys(key, n_replicates)
 
     def replicate(kb, X_, y_, t_, phi_):
@@ -226,10 +237,10 @@ def dr_bootstrap(outcome: Nuisance, propensity: Nuisance, *, n_folds: int,
                              phi_, kfit, w, clip=clip, with_se=with_se,
                              row_block=row_block)
 
-    out = exe.map(replicate, keys, X, y, t, phi)
+    out = rt.map(replicate, keys, X, y, t, phi, label="dr_bootstrap")
     thetas = out["theta"]
     return InferenceResult(
-        method=scheme, executor=exe.name,
+        method=scheme, executor=rt.name,
         point=thetas.mean(axis=0) if point is None else point,
         replicates=thetas, se=jnp.std(thetas, axis=0, ddof=1),
         alpha=alpha, point_se=point_se, replicate_se=out.get("se"),

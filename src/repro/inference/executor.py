@@ -162,7 +162,6 @@ class ShardMapExecutor:
 
         xs_p = jax.tree_util.tree_map(pad_leaf, xs)
         spec = P(self.axis)
-        axis_name = self.axis
 
         def build(g):
             @jax.jit

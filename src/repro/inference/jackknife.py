@@ -30,7 +30,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import moments
-from repro.inference.executor import make_executor
 from repro.inference.intervals import InferenceResult
 from repro.inference.numerics import det_solve
 
@@ -41,11 +40,18 @@ def delete_fold_jackknife(y: jax.Array, t: jax.Array, oof_y: jax.Array,
                           alpha: float = 0.05, executor="vmap",
                           point=None, point_se=None,
                           mesh=None, rules=None, ridge: float = 1e-8,
-                          row_block: int = 0) -> InferenceResult:
+                          row_block: int = 0, memory_budget: int = 0,
+                          chunk: int = 0,
+                          max_retries: int = 2) -> InferenceResult:
     """Jackknife over the existing fold partition.  y, t: (n,);
     oof_y/oof_t: (n,) out-of-fold nuisance predictions from the fit;
-    folds: (n,) fold ids."""
-    exe = make_executor(executor, mesh=mesh, rules=rules)
+    folds: (n,) fold ids.  The k delete-fold solves go through the task
+    runtime like bootstrap replicates (chunking is moot at k solves,
+    but the fault-tolerance ladder still applies)."""
+    from repro.runtime import as_runtime
+    sched = as_runtime(executor, mesh=mesh, rules=rules,
+                       memory_budget=memory_budget, chunk=chunk,
+                       max_retries=max_retries)
     f32 = jnp.float32
     n, p = phi.shape
     ry = y.astype(f32) - oof_y
@@ -69,13 +75,14 @@ def delete_fold_jackknife(y: jax.Array, t: jax.Array, oof_y: jax.Array,
         A = Gd[:p, :p] + ridge * seg["n_eff"] * jnp.eye(p, dtype=f32)
         return det_solve(A, Gd[:p, p])
 
-    thetas = exe.map(drop_fold, {"G": Gh, "n_eff": n_eff}, G_tot)
+    thetas = sched.map(drop_fold, {"G": Gh, "n_eff": n_eff}, G_tot,
+                       label="jackknife")
     theta_bar = thetas.mean(axis=0)
     center = theta_bar if point is None else point
     k = float(n_folds)
     se = jnp.sqrt(jnp.clip(
         (k - 1.0) / k * jnp.square(thetas - theta_bar[None, :]).sum(axis=0),
         0.0, None))
-    return InferenceResult(method="jackknife", executor=exe.name,
+    return InferenceResult(method="jackknife", executor=sched.name,
                            point=center, replicates=thetas, se=se,
                            alpha=alpha, point_se=point_se)

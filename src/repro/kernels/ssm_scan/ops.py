@@ -11,7 +11,6 @@ import functools
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.ssm_scan import ref as _ref
 from repro.kernels.ssm_scan import kernel as _kernel

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import (ModelConfig, ParallelConfig, ShapeConfig,
-                          SHAPE_BY_NAME, TrainConfig)
+    SHAPE_BY_NAME)
 from repro.configs import get_config
 from repro.distributed.sharding import ShardingRules, logical_to_spec
 from repro.models.model import Model, build_model

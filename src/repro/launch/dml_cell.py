@@ -9,7 +9,7 @@ axis; the Gram/Newton reductions are the collectives.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

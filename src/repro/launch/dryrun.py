@@ -32,11 +32,10 @@ from typing import Any, Dict, Optional
 
 import jax
 from repro.distributed.sharding import mesh_context
-import jax.numpy as jnp
 
-from repro.config import SHAPES, SHAPE_BY_NAME, TrainConfig
-from repro.configs import ARCH_IDS, get_config
-from repro.launch.cells import Cell, cell_input_shardings, make_cell, named
+from repro.config import SHAPES, TrainConfig
+from repro.configs import ARCH_IDS
+from repro.launch.cells import Cell, cell_input_shardings, make_cell
 from repro.launch.mesh import make_production_mesh
 from repro.launch import hlo_cost
 from repro.launch.roofline import Roofline, model_flops_for

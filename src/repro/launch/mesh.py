@@ -7,7 +7,6 @@ first backend init, and only dryrun.py is allowed to set the
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence
 
 import jax
 

@@ -14,7 +14,6 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.config import ModelConfig, ParallelConfig
 from repro.models.model import Model
 
 

@@ -8,7 +8,6 @@ cross-attention) is implemented in full.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +16,7 @@ from repro.config import ModelConfig, ParallelConfig
 from repro.distributed.sharding import ParamDef, constrain
 from repro.models import attention as attn
 from repro.models.layers import layernorm, layernorm_schema, mlp_schema, mlp_apply
-from repro.models.transformer import stack_schema, scan_train, scan_prefill, scan_decode
+from repro.models.transformer import stack_schema, scan_train
 
 
 # ---------------------------------------------------------------------------

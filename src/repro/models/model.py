@@ -13,7 +13,6 @@ Shape-cell semantics (matching the assignment):
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -23,7 +22,6 @@ from repro.config import ModelConfig, ParallelConfig, ShapeConfig
 from repro.distributed.sharding import (ParamDef, abstract_params, constrain,
                                         init_params, param_shardings,
                                         param_specs)
-from repro.models import attention as attn
 from repro.models import encdec
 from repro.models.layers import (embedding_schema, embed_tokens, make_norm,
                                  softmax_cross_entropy, unembed)

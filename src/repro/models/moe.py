@@ -17,7 +17,7 @@ Design notes (TPU adaptation):
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,7 @@ fit the 480B/671B MoE cells on v5e, see EXPERIMENTS.md §Dry-run)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

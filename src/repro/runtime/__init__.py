@@ -1,0 +1,31 @@
+# Ray-style task-graph runtime over the Executor backends — the
+# scheduler layer the paper attributes to Ray, translated to SPMD:
+#   future.py     TaskFuture handles + deterministic DAG execution
+#                 (submit/call/gather — Ray's ObjectRef semantics)
+#   memory.py     affine peak-memory model of the lowered replicate
+#                 closure (launch.hlo_cost probes) -> auto chunk sizing
+#   scheduler.py  TaskRuntime: memory-aware chunked maps, per-chunk
+#                 retry with backend downgrade (shard_map -> vmap ->
+#                 serial, bit-identical results), nested (outer x inner)
+#                 parallelism via map_product
+from repro.runtime.future import TaskFuture, TaskGraph, resolve
+from repro.runtime.memory import MemoryModel, memory_model, probe_peak_bytes
+from repro.runtime.scheduler import (
+    DOWNGRADE,
+    RuntimeEvent,
+    TaskRuntime,
+    as_runtime,
+)
+
+__all__ = [
+    "TaskFuture",
+    "TaskGraph",
+    "resolve",
+    "MemoryModel",
+    "memory_model",
+    "probe_peak_bytes",
+    "DOWNGRADE",
+    "RuntimeEvent",
+    "TaskRuntime",
+    "as_runtime",
+]

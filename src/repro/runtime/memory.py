@@ -1,0 +1,125 @@
+"""Memory-aware replicate batching: how many replicates fit one device.
+
+Ray sizes task placement by declared resources; XLA has no such
+declaration, but the compiled program *is* inspectable: lowering the
+vmapped replicate closure at a probe batch size and parsing the
+post-optimization HLO with ``launch.hlo_cost.peak_temp_bytes`` yields
+the largest temporary the program materializes.  Two probes (batch 1
+and batch ``PROBE_CHUNK``) fit the affine model
+
+    peak(c) ≈ base + slope · c
+
+— ``base`` is the replicate-independent footprint (the shared data
+tensors every replicate reads), ``slope`` the per-replicate increment
+(the (c, k, n) weight tensors and fold-batched Gram stacks that grow
+with the batch).  The scheduler then solves for the largest chunk whose
+predicted peak stays under ``CausalConfig.runtime_memory_budget``, so
+``n_bootstrap=2000`` at industrial n streams in chunks instead of
+OOMing the one-big-vmap path.
+
+Probes are compile-only (no execution) and cached per (closure, input
+signature), so repeated ``map`` calls with the same closure — the hot
+pattern everywhere in this codebase — lower at most twice.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.launch.hlo_cost import peak_temp_bytes
+
+PROBE_CHUNK = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryModel:
+    """Affine peak-memory model of one replicate chunk."""
+
+    base: float  # replicate-independent bytes (shared data passes)
+    slope: float  # incremental bytes per replicate in the batch
+
+    def peak(self, chunk: int) -> float:
+        return self.base + self.slope * max(chunk, 0)
+
+    def max_chunk(self, budget_bytes: int, b: int) -> int:
+        """Largest chunk (≤ b) whose predicted peak fits the budget.
+        Never returns less than 1 — a single replicate must run even if
+        it alone exceeds the budget (the serial floor)."""
+        if budget_bytes <= 0 or self.peak(b) <= budget_bytes:
+            return b
+        if self.slope <= 0:
+            return b
+        c = int((budget_bytes - self.base) // self.slope)
+        return max(1, min(c, b))
+
+
+def _signature(xs: Any, args: Tuple[Any, ...]) -> Tuple:
+    leaves = jax.tree_util.tree_leaves((xs, args))
+    return tuple(
+        (tuple(getattr(leaf, "shape", ())), str(getattr(leaf, "dtype", type(leaf))))
+        for leaf in leaves
+    )
+
+
+def _element_spec(xs: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), xs
+    )
+
+
+def _spec(tree: Any) -> Any:
+    # scalar / non-array pass-through args stay concrete: executors
+    # accept them (jit bakes them in), so lowering must too
+    return jax.tree_util.tree_map(
+        lambda x: (
+            jax.ShapeDtypeStruct(x.shape, x.dtype) if hasattr(x, "shape") else x
+        ),
+        tree,
+    )
+
+
+def probe_peak_bytes(fn, xs: Any, args: Tuple[Any, ...], chunk: int) -> int:
+    """Peak-temp bytes of the ``chunk``-replicate vmapped program, from
+    compiled HLO (no execution)."""
+    elem = _element_spec(xs)
+    xs_spec = jax.tree_util.tree_map(
+        lambda e: jax.ShapeDtypeStruct((chunk,) + e.shape, e.dtype), elem
+    )
+
+    def batched(xs_, *a):
+        return jax.vmap(lambda x_: fn(x_, *a))(xs_)
+
+    lowered = jax.jit(batched).lower(xs_spec, *_spec(args))
+    return peak_temp_bytes(lowered.compile().as_text())
+
+
+# Closure -> {input signature -> MemoryModel}.  Weak keys let dead
+# closures drop out, mirroring the executors' _JitCache.
+_MODEL_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def memory_model(fn, xs: Any, args: Tuple[Any, ...], b: int) -> Optional[MemoryModel]:
+    """Fit (and cache) the affine peak model for ``fn`` on these input
+    shapes.  Returns None when the closure cannot be lowered from specs
+    alone — the scheduler then falls back to unchunked execution."""
+    sig = _signature(xs, args)
+    per_fn = _MODEL_CACHE.setdefault(fn, {})
+    if sig in per_fn:
+        return per_fn[sig]
+    try:
+        p1 = probe_peak_bytes(fn, xs, args, 1)
+        c2 = min(max(b, 1), PROBE_CHUNK)
+        if c2 <= 1:
+            model = MemoryModel(base=0.0, slope=float(p1))
+        else:
+            p2 = probe_peak_bytes(fn, xs, args, c2)
+            slope = max((p2 - p1) / (c2 - 1), 0.0)
+            model = MemoryModel(base=max(p1 - slope, 0.0), slope=slope)
+    except Exception:
+        model = None
+    per_fn[sig] = model
+    return model

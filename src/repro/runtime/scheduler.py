@@ -1,0 +1,308 @@
+"""The task scheduler: Ray's pool semantics over Executor backends.
+
+``TaskRuntime`` grows PR 1's flat ``Executor.map`` into the scheduling
+layer the paper attributes to Ray:
+
+  chunked scheduling   the replicate axis is split into chunks sized by
+                       the affine peak-memory model of the lowered
+                       closure (runtime.memory) against a per-device
+                       budget — ``n_bootstrap=2000`` streams instead of
+                       OOMing one giant vmap;
+  fault tolerance      each chunk retries down the backend ladder
+                       (shard_map → vmap → serial) on failure, the SPMD
+                       stand-in for Ray re-executing a lost task on
+                       another worker.  Results stay bit-identical:
+                       per-replicate numerics are batch-size-invariant
+                       and serial ≡ vmap bitwise, so a downgraded chunk
+                       computes the same bits the healthy backend would
+                       have;
+  deterministic order  chunks are dispatched and concatenated in fixed
+                       replicate order, whatever backends ran them;
+  nested parallelism   ``map_product`` flattens two parallel axes
+                       (replicate × fold, trial × fold) into ONE
+                       batched program, with the same chunked/fault-
+                       tolerant machinery subdividing the product axis
+                       when the budget demands — the scheduler, not the
+                       caller, decides how much runs at once;
+  futures              ``submit``/``call``/``gather`` (runtime.future)
+                       express dependent stages — successive-halving
+                       rungs, refuter panels — as a task DAG instead of
+                       hand-ordered loops.
+
+A ``TaskRuntime`` with no budget, no explicit chunk, and a healthy
+backend degenerates to exactly one ``Executor.map`` call, so migrating
+callers onto the runtime costs nothing on the happy path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.inference.executor import Executor, make_executor
+from repro.runtime.future import TaskFuture, TaskGraph, resolve
+from repro.runtime.memory import MemoryModel, memory_model
+
+# The fault-tolerance ladder: each backend's failure falls back to the
+# next-simpler one.  serial has no fallback — its failure is the task's.
+DOWNGRADE: dict = {"shard_map": "vmap", "vmap": "serial", "serial": None}
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeEvent:
+    """One scheduling decision or recovery, for tests and reports."""
+
+    action: str  # "chunk" | "retry" | "downgrade"
+    label: str
+    chunk_index: int = -1
+    backend: str = ""
+    detail: str = ""
+
+
+def _leading_dim(xs: Any) -> int:
+    leaves = jax.tree_util.tree_leaves(xs)
+    if not leaves:
+        raise ValueError("runtime.map needs at least one array input")
+    return leaves[0].shape[0]
+
+
+def _slice(xs: Any, lo: int, hi: int) -> Any:
+    return jax.tree_util.tree_map(lambda x: x[lo:hi], xs)
+
+
+def _empty_like_mapped(fn, xs: Any, args: Tuple[Any, ...]) -> Any:
+    """Zero-replicate output: (0, ...) stacked leaves with the shapes
+    and dtypes one application of ``fn`` would produce."""
+    elem = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), xs
+    )
+    arg_spec = tuple(
+        jax.tree_util.tree_map(
+            lambda a: (
+                jax.ShapeDtypeStruct(a.shape, a.dtype) if hasattr(a, "shape") else a
+            ),
+            arg,
+        )
+        for arg in args
+    )
+    out = jax.eval_shape(fn, elem, *arg_spec)
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros((0,) + tuple(s.shape), s.dtype), out
+    )
+
+
+class TaskRuntime:
+    """Memory-aware, fault-tolerant scheduler over Executor backends.
+
+    Parameters
+    ----------
+    executor       backend name (serial | vmap | shard_map) or Executor
+                   instance — the *preferred* backend; failures walk the
+                   DOWNGRADE ladder from there.
+    memory_budget  bytes/device the batched program may peak at; 0
+                   disables the memory model (one chunk).
+    chunk          explicit replicate chunk size; 0 defers to the
+                   memory model (CausalConfig.runtime_chunk).
+    max_retries    extra attempts a chunk gets after its first failure
+                   (each attempt moves one rung down the ladder).
+    """
+
+    # fn -> fused (outer, inner) wrapper, weak so dead closures drop out
+    # (same pattern as the executors' _JitCache: the executor keys its
+    # compiled cache on the closure object, so the wrapper must be
+    # stable per fn).
+    _PRODUCT_FNS: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+    def __init__(
+        self,
+        executor="vmap",
+        *,
+        memory_budget: int = 0,
+        chunk: int = 0,
+        max_retries: int = 2,
+        mesh=None,
+        rules=None,
+    ):
+        self._primary = make_executor(executor, mesh=mesh, rules=rules)
+        self._mesh = mesh
+        self._rules = rules
+        self.memory_budget = int(memory_budget)
+        self.chunk = int(chunk)
+        self.max_retries = int(max_retries)
+        self.events: List[RuntimeEvent] = []
+        self._graph = TaskGraph()
+
+    # -- identity -------------------------------------------------------
+    @property
+    def name(self) -> str:
+        return self._primary.name
+
+    # -- backend ladder -------------------------------------------------
+    def _ladder(self) -> Tuple[Executor, ...]:
+        chain: List[Executor] = [self._primary]
+        nxt = DOWNGRADE.get(self._primary.name, "vmap")
+        while nxt is not None:
+            chain.append(make_executor(nxt, mesh=self._mesh, rules=self._rules))
+            nxt = DOWNGRADE.get(nxt)
+        # dedupe by backend name, keeping first occurrence
+        seen, out = set(), []
+        for exe in chain:
+            if exe.name not in seen:
+                seen.add(exe.name)
+                out.append(exe)
+        return tuple(out)
+
+    def _run_chunk(
+        self, fn, xs_c: Any, args: Tuple[Any, ...], label: str, index: int
+    ) -> Any:
+        err: Optional[BaseException] = None
+        for attempt, exe in enumerate(self._ladder()):
+            if attempt > self.max_retries:
+                break
+            if attempt:
+                self.events.append(
+                    RuntimeEvent("downgrade", label, index, exe.name, str(err))
+                )
+            try:
+                return exe.map(fn, xs_c, *args)
+            except Exception as e:  # noqa: BLE001 — the ladder handles it
+                err = e
+        assert err is not None
+        raise err
+
+    # -- chunk sizing ---------------------------------------------------
+    def plan_chunk(
+        self, fn, xs: Any, args: Tuple[Any, ...], b: int
+    ) -> Tuple[int, Optional[MemoryModel]]:
+        """(chunk size, memory model) the scheduler would use for this
+        map — exposed so benches can report predicted peaks."""
+        if self.chunk:
+            return max(1, min(self.chunk, b)), None
+        if self.memory_budget <= 0 or b <= 1:
+            return b, None
+        model = memory_model(fn, xs, args, b)
+        if model is None:
+            return b, None
+        return model.max_chunk(self.memory_budget, b), model
+
+    # -- the map primitive ----------------------------------------------
+    def map(self, fn: Callable[..., Any], xs: Any, *args: Any, label: str = "") -> Any:
+        """Map ``fn`` over the leading replicate axis of ``xs`` with
+        chunked, fault-tolerant scheduling.  Results are ordered by
+        replicate index regardless of chunking or downgrades."""
+        b = _leading_dim(xs)
+        if b == 0:
+            return _empty_like_mapped(fn, xs, args)
+        chunk, _ = self.plan_chunk(fn, xs, args, b)
+        if chunk >= b:
+            return self._run_chunk(fn, xs, args, label, 0)
+        self.events.append(
+            RuntimeEvent("chunk", label, -1, self._primary.name, f"b={b} chunk={chunk}")
+        )
+        outs = [
+            self._run_chunk(fn, _slice(xs, lo, min(lo + chunk, b)), args, label, i)
+            for i, lo in enumerate(range(0, b, chunk))
+        ]
+        return jax.tree_util.tree_map(lambda *ys: jnp.concatenate(ys, axis=0), *outs)
+
+    # -- nested parallelism ---------------------------------------------
+    def map_product(
+        self,
+        fn: Callable[..., Any],
+        xs_outer: Any,
+        xs_inner: Any,
+        *args: Any,
+        label: str = "",
+    ) -> Any:
+        """One batched program for two parallel axes: ``fn(xo, xi,
+        *args)`` over the (b_outer × b_inner) product, flattened onto a
+        single replicate axis so chunking/fault-tolerance subdivide the
+        *product* (the scheduler's choice), then reshaped back to
+        (b_outer, b_inner, ...)."""
+        bo = _leading_dim(xs_outer)
+        bi = _leading_dim(xs_inner)
+        fused = TaskRuntime._PRODUCT_FNS.get(fn)
+        if fused is None:
+            # the wrapper holds only a weakref to fn: a strong capture
+            # would pin the WeakKeyDictionary key alive through its own
+            # value, making every entry immortal.  fn is alive for the
+            # duration of any call that passes it in.
+            fn_ref = weakref.ref(fn)
+
+            def fused(pair, *a):
+                return fn_ref()(pair["outer"], pair["inner"], *a)
+
+            TaskRuntime._PRODUCT_FNS[fn] = fused
+        rep = jax.tree_util.tree_map(lambda x: jnp.repeat(x, bi, axis=0), xs_outer)
+        til = jax.tree_util.tree_map(
+            lambda x: jnp.tile(x, (bo,) + (1,) * (x.ndim - 1)), xs_inner
+        )
+        flat = self.map(
+            fused, {"outer": rep, "inner": til}, *args, label=label or "map_product"
+        )
+        return jax.tree_util.tree_map(
+            lambda y: y.reshape((bo, bi) + y.shape[1:]), flat
+        )
+
+    # -- futures API -----------------------------------------------------
+    def submit(
+        self,
+        fn: Callable[..., Any],
+        xs: Any,
+        *args: Any,
+        deps: Sequence[TaskFuture] = (),
+        label: str = "",
+    ) -> TaskFuture:
+        """Deferred ``map``: returns a TaskFuture immediately.  ``xs`` /
+        ``args`` may contain TaskFutures — resolved when gathered."""
+        return self._graph.submit("map", fn, xs, args, deps, label)
+
+    def call(
+        self,
+        fn: Callable[..., Any],
+        *args: Any,
+        deps: Sequence[TaskFuture] = (),
+        label: str = "",
+    ) -> TaskFuture:
+        """Deferred host call — the glue nodes between map stages
+        (survivor selection, reductions)."""
+        return self._graph.submit("call", fn, None, args, deps, label)
+
+    def gather(self, futures):
+        """Execute the DAG below ``futures`` (deterministic topological
+        order) and return their results, preserving structure."""
+        single = isinstance(futures, TaskFuture)
+        targets = [futures] if single else list(futures)
+        self._graph.execute(
+            targets,
+            lambda f: self.map(f.fn, resolve(f.xs), *resolve(f.args), label=f.label),
+        )
+        out = [t.result() for t in targets]
+        return out[0] if single else out
+
+
+def as_runtime(
+    executor,
+    *,
+    mesh=None,
+    rules=None,
+    memory_budget: int = 0,
+    chunk: int = 0,
+    max_retries: int = 2,
+) -> TaskRuntime:
+    """Coerce an executor name / Executor / TaskRuntime into a
+    TaskRuntime — the adapter every migrated caller goes through."""
+    if isinstance(executor, TaskRuntime):
+        return executor
+    return TaskRuntime(
+        executor,
+        mesh=mesh,
+        rules=rules,
+        memory_budget=memory_budget,
+        chunk=chunk,
+        max_retries=max_retries,
+    )

@@ -3,7 +3,6 @@ S/T/X metalearners): all recover the ATE on the standard DGP, and the
 doubly-robust property holds under a broken outcome model."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.config import CausalConfig

@@ -1,13 +1,12 @@
 """Checkpoint manager: atomic roundtrip, async, retention, elastic
 re-shard restore, and exact training-resume lineage."""
-import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.manager import CheckpointManager, restore_tree
+from repro.checkpoint.manager import CheckpointManager
 
 
 def _state(key):
@@ -82,7 +81,7 @@ def test_training_resume_is_exact(tmp_path):
     from repro.config import TrainConfig
     from repro.configs import get_config
     from repro.data.lm_data import lm_batch
-    from repro.launch.train import TrainState, make_train_step
+    from repro.launch.train import make_train_step
     from repro.optim.adamw import adamw_init
 
     cfg = get_config("whisper-tiny-smoke")

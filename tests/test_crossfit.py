@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.crossfit import (crossfit_parallel, crossfit_sequential,
                                  fold_ids, fold_weights, _oof_select)

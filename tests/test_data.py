@@ -1,14 +1,13 @@
 """Data substrate: DGP determinism + ground truth, LM stream lineage,
 prefetching feed ordering."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.data.causal_dgp import (make_causal_data,
                                    make_sharded_causal_data)
-from repro.data.lm_data import (bigram_ce_floor, lm_batch, lm_batch_stream,
-                                synthetic_tokens)
+from repro.data.lm_data import (bigram_ce_floor, lm_batch_stream,
+    synthetic_tokens)
 from repro.data.pipeline import ShardedFeed
 
 

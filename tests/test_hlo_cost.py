@@ -1,8 +1,6 @@
 """Trip-count-aware HLO cost model vs XLA ground truth."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch import hlo_cost
 

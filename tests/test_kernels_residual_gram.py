@@ -5,7 +5,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.residual_gram import kernel as rg_kernel
 from repro.kernels.residual_gram import ops as rg_ops
 from repro.kernels.residual_gram import ref as rg_ref
 

@@ -7,7 +7,7 @@ import pytest
 from repro.config import TrainConfig
 from repro.optim.adamw import adamw_init, adamw_update, clip_by_global_norm
 from repro.optim.compression import (ErrorFeedback, compress_decompress,
-                                     compressed_psum_mean, ef_init)
+    compressed_psum_mean)
 from repro.optim.schedule import cosine_schedule, linear_schedule
 
 

@@ -4,7 +4,6 @@ greedy reference."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,7 +1,6 @@
 """Sharding policy: every (arch x shape x mesh) cell's parameter and
 input specs must divide evenly — the fast (no-lowering) half of the
 multi-pod dry-run, covering all 40 cells x 2 meshes on one CPU device."""
-import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 

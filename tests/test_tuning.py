@@ -2,7 +2,6 @@
 picks the statistically right penalty; successive halving converges."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.config import CausalConfig
