@@ -1,0 +1,117 @@
+"""Orthogonal-IV workload benchmarks: the fourth paper-parallelized
+estimator family on the same harness as bench_crossfit /
+bench_inference.
+
+  iv_orthoiv_fit      one full OrthoIV fit (3 cross-fit nuisances + the
+                      instrumented final stage) — the per-fit cost the
+                      paper's catalogue scales;
+  iv_driv_fit         one full DRIV fit (4 nuisances + pseudo-outcome
+                      regression);
+  iv_bootstrap_seq /  B weighted OrthoIV refits through the serial
+  iv_bootstrap_vmap   (Ray-less loop) vs vmap (one batched program)
+                      executors — the mechanism speedup on the IV
+                      moment.
+
+Entries are gated by the CI bench-regression gate (prefix "iv" in
+benchmarks/compare.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.config import CausalConfig
+from repro.core.iv import DRIV, OrthoIV
+from repro.data.causal_dgp import make_iv_data
+from repro.inference import make_executor
+from repro.inference.bootstrap import replicate_keys
+
+
+def _time(fn, reps: int = 1) -> float:
+    fn()  # warm-up / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps
+
+
+def time_iv_bootstrap(est: OrthoIV, ctx, B: int, executor: str,
+                      key) -> float:
+    """Wall-clock for B OrthoIV bootstrap replicates through one
+    executor (warm; isolates dispatch mechanism, not compile)."""
+    from repro.inference.bootstrap import (bootstrap_weights,
+                                           iv_theta_once)
+    exe = make_executor(executor)
+    keys = replicate_keys(key, B)
+    n_folds = est.cfg.n_folds
+
+    def replicate(kb, XW, y, t, z, phi):
+        kw, kfit = jax.random.split(kb)
+        w = bootstrap_weights(kw, XW.shape[0], "pairs")
+        return iv_theta_once(est.nuis_y, est.nuis_t, est.nuis_z,
+                             n_folds, XW, y, t, z, phi, kfit, w,
+                             with_se=False)
+
+    def run():
+        jax.block_until_ready(
+            exe.map(replicate, keys, ctx.XW, ctx.y, ctx.t, ctx.z,
+                    ctx.phi)["theta"])
+
+    return _time(run)
+
+
+def run(sizes=(5_000,), p=20, B=16, n_folds=5, key=None, csv=print):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    rows = []
+    for n in sizes:
+        data = make_iv_data(jax.random.fold_in(key, n), n, p,
+                            effect=1.0, compliance=0.7)
+        cfg = CausalConfig(n_folds=n_folds, inference="none")
+        est = OrthoIV(cfg)
+        driv = DRIV(cfg)
+
+        def fit_once():
+            r = est.fit(data.y, data.t, data.z, data.X, key=key)
+            jax.block_until_ready(r.theta)
+            return r
+
+        t_fit = _time(fit_once)
+        res = fit_once()
+        err = abs(res.late - data.true_late)
+        csv(f"iv_orthoiv_fit_n{n}_p{p},{t_fit*1e6:.0f},"
+            f"late_err={err:.4f}")
+
+        def driv_once():
+            r = driv.fit(data.y, data.t, data.z, data.X, key=key)
+            jax.block_until_ready(r.theta)
+
+        t_driv = _time(driv_once)
+        csv(f"iv_driv_fit_n{n}_p{p},{t_driv*1e6:.0f},"
+            f"ratio={t_driv/t_fit:.2f}x")
+
+        ctx = res.fit_ctx
+        kb = jax.random.fold_in(key, 0x1b00)
+        t_seq = time_iv_bootstrap(est, ctx, B, "serial", kb)
+        t_vec = time_iv_bootstrap(est, ctx, B, "vmap", kb)
+        csv(f"iv_bootstrap_seq_n{n}_p{p}_B{B},{t_seq*1e6:.0f},baseline")
+        csv(f"iv_bootstrap_vmap_n{n}_p{p}_B{B},{t_vec*1e6:.0f},"
+            f"speedup={t_seq/t_vec:.2f}x")
+        rows.append((n, t_fit, t_driv, t_seq, t_vec))
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale n sweep with B=200")
+    args = ap.parse_args(argv)
+    if args.full:
+        run(sizes=(10_000, 100_000), p=500, B=200)
+    else:
+        run(sizes=(5_000,), p=20, B=16)
+
+
+if __name__ == "__main__":
+    main()

@@ -90,6 +90,15 @@ def main(argv=None):
     else:
         bench_inference.run(sizes=(5_000, 10_000), p=20, B=32, csv=rec)
 
+    print("# --- orthogonal-IV family: OrthoIV/DRIV fits + bootstrap ---")
+    from benchmarks import bench_iv
+    if args.full:
+        bench_iv.run(sizes=(10_000, 100_000), p=500, B=200, csv=rec)
+    elif args.smoke:
+        bench_iv.run(sizes=(5_000,), p=20, B=16, csv=rec)
+    else:
+        bench_iv.run(sizes=(5_000, 10_000), p=20, B=32, csv=rec)
+
     print("# --- streaming moments: chunked vs whole final stage ---")
     from benchmarks import bench_final_stage
     if args.full:

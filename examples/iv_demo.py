@@ -1,0 +1,59 @@
+"""Orthogonal-IV demo: when an unobserved confounder drives treatment,
+DML is biased and an instrument rescues the estimand.
+
+EconML equivalent (the estimators the paper's catalogue parallelizes
+alongside DML):
+
+    est = OrthoIV(...)                   # or DRIV(...)
+    est.fit(y, T, Z=Z, X=X)
+    est.ate_interval(X)
+
+Here the three nuisances (E[Y|X], E[T|X], E[Z|X]) cross-fit through the
+same fold-parallel engine as DML, the residual-on-residual 2SLS moment
+comes off ONE instrumented streaming Gram, and the B bootstrap refits
+run as one runtime-scheduled program.
+
+    PYTHONPATH=src python examples/iv_demo.py
+"""
+import jax
+
+from repro.config import CausalConfig
+from repro.core.dml import DML
+from repro.core.iv import DRIV, OrthoIV
+from repro.core.refutation import weak_instrument
+from repro.data.causal_dgp import make_iv_data
+
+key = jax.random.PRNGKey(0)
+data = make_iv_data(jax.random.PRNGKey(42), 8_000, 10,
+                    effect=1.5, compliance=0.7)
+
+cfg = CausalConfig(
+    n_folds=5,
+    nuisance_z="logistic",    # instrument model E[Z|X]
+    inference="bootstrap",
+    n_bootstrap=200,
+    inference_executor="vmap",  # all 200 IV refits in ONE program
+)
+
+print(f"true LATE       : {data.true_late:+.4f}")
+
+naive = DML(cfg).fit(data.y, data.t, data.X, key=key)
+print(f"naive DML ATE   : {naive.ate:+.4f}   <- confounded (no instrument)")
+
+res = OrthoIV(cfg).fit(data.y, data.t, data.z, data.X, key=key)
+print(f"OrthoIV LATE    : {res.late:+.4f} ± {float(res.stderr[0]):.4f}")
+
+lo, hi = res.late_interval()              # 200 vmapped replicates
+print(f"bootstrap CI    : [{lo:+.4f}, {hi:+.4f}]  (percentile, B=200)")
+
+jk = res.inference(method="jackknife")    # near-free: one segmented pass
+print(f"jackknife CI    : [{jk.ate_interval()[0]:+.4f}, "
+      f"{jk.ate_interval()[1]:+.4f}]")
+
+dr = DRIV(cfg).fit(data.y, data.t, data.z, data.X, key=key)
+print(f"DRIV LATE       : {dr.late:+.4f} ± {dr.stderr:.4f}")
+
+print()
+print(weak_instrument(res).row())
+print()
+print(res.summary())

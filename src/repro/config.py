@@ -245,11 +245,25 @@ class CausalConfig:
     # bit-identical (see core/moments.py); different settings agree to
     # float reassociation only.
     row_block: int = 0
+    # Blocked-evaluation strategy at row_block > 0: "chunked" streams
+    # one lax.scan-sliced block at a time (bounded memory), "whole"
+    # materializes every block partial at once.  The two are
+    # bit-identical for equal row_block (the moments contract); the
+    # knob exists so the conformance harness can assert that equality
+    # at the ESTIMATOR level, and so perf work can trade memory for
+    # fusion freedom without touching call sites.
+    row_block_strategy: str = "chunked"  # chunked | whole
     mlp_hidden: Tuple[int, ...] = (256, 256)
     mlp_steps: int = 200
     mlp_lr: float = 1e-3
     discrete_treatment: bool = True
     engine: str = "parallel"  # parallel (paper, C1) | sequential (EconML baseline)
+    # --- instrumental variables (repro.core.iv: OrthoIV / DRIV) ---
+    nuisance_z: str = "logistic"  # instrument model E[Z|X] (logistic | ridge | mlp)
+    discrete_instrument: bool = True
+    # DRIV clips the compliance denominator E[rt·rz|X] away from zero
+    # (EconML's cov_clip); magnitude floor, sign-preserving.
+    iv_cov_clip: float = 0.1
     # --- uncertainty quantification (repro.inference subsystem) ---
     inference: str = "bootstrap"  # bootstrap (pairs) | multiplier | jackknife | none
     n_bootstrap: int = 200        # B replicates (EconML BootstrapInference)

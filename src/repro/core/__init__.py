@@ -7,7 +7,10 @@
 #   dml.py          the estimator facade (DML / DML_Ray translation)
 #   nuisance.py     MXU-native nuisance zoo (ridge/logistic/MLP/backbone)
 #   final_stage.py  orthogonal moment via the fused residual_gram kernel
-#   refutation.py   NEXUS validation suite (placebo / RCC / subset)
+#   iv.py           orthogonal-IV family (OrthoIV / DRIV) on the same
+#                   moments + crossfit + runtime substrate
+#   refutation.py   NEXUS validation suite (placebo / RCC / subset /
+#                   weak-instrument F screen)
 #   estimands.py    ATE/ATT/CATE summaries + diagnostics
 # Uncertainty quantification (bootstrap/jackknife CIs) lives in
 # repro.inference; tuning + refutation replicate loops dispatch through
@@ -20,3 +23,7 @@ from repro.core.nuisance import Nuisance, make_nuisance, make_ridge, make_logist
 from repro.core.final_stage import cate_basis, fit_final_stage  # noqa: F401
 from repro.core.drlearner import DRLearner  # noqa: F401
 from repro.core.metalearners import s_learner, t_learner, x_learner  # noqa: F401
+# iv last: it pulls repro.inference.numerics, whose package __init__
+# imports the core submodules above (all satisfied from sys.modules by
+# this point — no cycle)
+from repro.core.iv import DRIV, OrthoIV  # noqa: F401

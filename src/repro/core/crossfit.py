@@ -109,11 +109,13 @@ def crossfit_parallel_loo(nuis: Nuisance, key: jax.Array, X: jax.Array,
     lam = (nuis.init(key, p)["lam"]
            if nuis.name in ("ridge", "logistic") else 0.0)
     rb = (nuis.hyper or {}).get("row_block", 0)
+    st = (nuis.hyper or {}).get("strategy", None)
     if nuis.name == "ridge":
-        states = ridge_fit_folds(lam, X, target, folds, k, row_block=rb)
+        states = ridge_fit_folds(lam, X, target, folds, k, row_block=rb,
+                                 strategy=st)
     elif nuis.name == "logistic":
         states = logistic_fit_folds(lam, mm_iters, X, target, folds, k,
-                                    row_block=rb)
+                                    row_block=rb, strategy=st)
     else:
         return crossfit_parallel(nuis, key, X, target, folds, k, rules)
     preds = jax.vmap(nuis.predict, in_axes=(0, None))(states, X)
@@ -144,6 +146,26 @@ class CrossfitResult:
     states_t: Any
 
 
+def crossfit_one(nuis: Nuisance, key: jax.Array, X: jax.Array,
+                 target: jax.Array, folds: jax.Array, k: int,
+                 engine: str = "parallel", rules=None
+                 ) -> Tuple[jax.Array, Any]:
+    """Engine dispatch for ONE cross-fit target over a fixed fold
+    assignment — the unit `crossfit` composes twice and the IV
+    estimators (three nuisances: E[Y|X], E[T|X], E[Z|X]) compose three
+    or four times.  engine: "parallel" (paper C1) maps the fold axis
+    through ``vmap``; "sequential" through ``serial``; "parallel_loo"
+    takes the one-pass LOO-Gram fast path; any other executor name or
+    Executor/TaskRuntime instance maps the fold axis directly."""
+    if engine == "parallel_loo":
+        return crossfit_parallel_loo(nuis, key, X, target, folds, k, rules)
+    if engine == "sequential":
+        return crossfit_sequential(nuis, key, X, target, folds, k)
+    exe = "vmap" if engine == "parallel" else engine
+    return crossfit_parallel(nuis, key, X, target, folds, k, rules,
+                             executor=exe)
+
+
 def crossfit(nuis_y: Nuisance, nuis_t: Nuisance, key: jax.Array,
              X: jax.Array, y: jax.Array, t: jax.Array, k: int,
              engine: str = "parallel", rules=None) -> CrossfitResult:
@@ -154,17 +176,7 @@ def crossfit(nuis_y: Nuisance, nuis_t: Nuisance, key: jax.Array,
     Executor instance maps the fold axis directly."""
     kf, ky, kt = jax.random.split(key, 3)
     folds = fold_ids(kf, X.shape[0], k)
-    if engine == "parallel_loo":
-        oof_y, st_y = crossfit_parallel_loo(nuis_y, ky, X, y, folds, k, rules)
-        oof_t, st_t = crossfit_parallel_loo(nuis_t, kt, X, t, folds, k, rules)
-    elif engine == "sequential":
-        oof_y, st_y = crossfit_sequential(nuis_y, ky, X, y, folds, k)
-        oof_t, st_t = crossfit_sequential(nuis_t, kt, X, t, folds, k)
-    else:
-        exe = "vmap" if engine == "parallel" else engine
-        oof_y, st_y = crossfit_parallel(nuis_y, ky, X, y, folds, k, rules,
-                                        executor=exe)
-        oof_t, st_t = crossfit_parallel(nuis_t, kt, X, t, folds, k, rules,
-                                        executor=exe)
+    oof_y, st_y = crossfit_one(nuis_y, ky, X, y, folds, k, engine, rules)
+    oof_t, st_t = crossfit_one(nuis_t, kt, X, t, folds, k, engine, rules)
     return CrossfitResult(oof_y=oof_y, oof_t=oof_t, folds=folds,
                           states_y=st_y, states_t=st_t)

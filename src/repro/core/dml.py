@@ -197,6 +197,7 @@ class DML:
         phi = cate_basis(X, self.cfg.cate_features)
         fs = fit_final_stage(y, t, cf.oof_y, cf.oof_t, phi,
                              row_block=self.cfg.row_block,
+                             strategy=self.cfg.row_block_strategy,
                              rules=self.rules)
         theta_at_x = phi @ fs.theta
         diag = compute_diagnostics(y, t, cf.oof_y, cf.oof_t, theta_at_x)

@@ -119,10 +119,12 @@ class DRLearner:
                  propensity: Optional[Nuisance] = None,
                  clip: float = 0.01):
         self.cfg = cfg
-        self.outcome = outcome or make_ridge(cfg.ridge_lambda,
-                                             row_block=cfg.row_block)
+        self.outcome = outcome or make_ridge(
+            cfg.ridge_lambda, row_block=cfg.row_block,
+            strategy=cfg.row_block_strategy)
         self.propensity = propensity or make_logistic(
-            cfg.ridge_lambda, cfg.newton_iters, row_block=cfg.row_block)
+            cfg.ridge_lambda, cfg.newton_iters, row_block=cfg.row_block,
+            strategy=cfg.row_block_strategy)
         self.clip = clip
 
     def _crossfit_outcome_arm(self, key, X, y, t, folds, arm: int):
@@ -173,7 +175,8 @@ class DRLearner:
         q = phi.shape[1]
         Gaug, _ = moments.weighted_gram(phi, jnp.ones((n,), jnp.float32),
                                         append=psi,
-                                        row_block=self.cfg.row_block)
+                                        row_block=self.cfg.row_block,
+                                        strategy=self.cfg.row_block_strategy)
         G = Gaug[:q, :q] + 1e-8 * n * jnp.eye(q)
         theta = jnp.linalg.solve(G, Gaug[:q, q])
         ctx = {"X": X, "y": y, "t": t, "phi": phi, "key": key,

@@ -44,6 +44,58 @@ def compute_diagnostics(y, t, my, mt, theta_at_x, rt_clip: float = 1e-9
     )
 
 
+@dataclasses.dataclass(frozen=True)
+class IVDiagnostics:
+    """Instrument-side health checks for the orthogonal-IV family, on
+    top of the shared residual diagnostics."""
+
+    first_stage_f: float     # heteroskedasticity-robust first-stage F
+    instrument_corr: float   # corr(rz, rt): the identifying covariance
+    resid_z_mean: float      # E[rz] ≈ 0 if m_z unbiased
+    ortho_moment: float      # |E[(ry - θᵀφ·rt)·rz]| ≈ 0 (the IV moment)
+    min_instrument_propensity: float   # overlap of E[Z|X]
+    max_instrument_propensity: float
+    weak_instrument: bool    # F below the Stock-Yogo rule-of-thumb 10
+
+    def rows(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def first_stage_f(rt: jax.Array, rz: jax.Array) -> float:
+    """Robust first-stage F: the squared t-statistic of pi in
+    ``rt = pi·rz + u`` with HC0 variance — the standard
+    weak-instrument screen (F < 10 ⇒ weak, Stock & Yogo)."""
+    f32 = jnp.float32
+    rtf, rzf = rt.astype(f32), rz.astype(f32)
+    szz = jnp.maximum((rzf * rzf).sum(), 1e-12)
+    pi = (rzf * rtf).sum() / szz
+    u = rtf - pi * rzf
+    var_pi = (rzf * rzf * u * u).sum() / (szz * szz)
+    return float(pi * pi / jnp.maximum(var_pi, 1e-30))
+
+
+def compute_iv_diagnostics(t, z, mt, mz, e=None, *,
+                           f_threshold: float = 10.0) -> IVDiagnostics:
+    """``e`` is the final-stage residual ``ry - θᵀφ·rt`` (omit for the
+    pre-fit view)."""
+    f32 = jnp.float32
+    rt = (t - mt).astype(f32)
+    rz = (z - mz).astype(f32)
+    f_stat = first_stage_f(rt, rz)
+    corr = jnp.corrcoef(jnp.stack([rz, rt]))[0, 1]
+    ortho = float(jnp.abs((e.astype(f32) * rz).mean())) if e is not None \
+        else float("nan")
+    return IVDiagnostics(
+        first_stage_f=f_stat,
+        instrument_corr=float(corr),
+        resid_z_mean=float(rz.mean()),
+        ortho_moment=ortho,
+        min_instrument_propensity=float(mz.min()),
+        max_instrument_propensity=float(mz.max()),
+        weak_instrument=bool(f_stat < f_threshold),
+    )
+
+
 def ate_from_cate(cate: jax.Array) -> float:
     return float(cate.mean())
 

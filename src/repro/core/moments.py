@@ -22,7 +22,7 @@ Memory model
                   block-by-block in FIXED left-to-right order:
 
       strategy "whole"    every block partial materializes at once
-                          (one vmapped block program + an ordered
+                          (an unbatched per-block lax.map + an ordered
                           fold) — peak memory ~ O(n·q + B·q²);
       strategy "chunked"  ``lax.scan`` streams one dynamic-sliced
                           block at a time, each block constrained on
@@ -126,7 +126,14 @@ def blocked_reduce(block_fn: Callable[..., Any], arrays: Sequence[Array],
             constrain(a.reshape((nb, r) + a.shape[1:]),
                       ("row_block", "rows") + (None,) * (a.ndim - 1), rules)
             for a in arrays)
-        parts = jax.vmap(block_fn)(*blocks)
+        # lax.map, NOT vmap: each block partial comes from the SAME
+        # unbatched per-block graph the chunked strategy traces, so
+        # chunked ≡ whole is structural — a vmapped block program's
+        # einsums can retile under batching (measured: the p=1 meat
+        # with no weight operand), which would break the contract
+        # data-dependently.  All partials still materialize at once,
+        # which is this strategy's memory signature.
+        parts = lax.map(lambda bs: block_fn(*bs), blocks)
         acc0 = tmap(lambda x: jnp.zeros(x.shape[1:], x.dtype), parts)
         out, _ = lax.scan(lambda acc, g: (tmap(jnp.add, acc, g), None),
                           acc0, parts)
@@ -187,15 +194,38 @@ def weighted_gram_and_vec(X: Array, wg: Array, v: Array, *,
     *different* row weights sharing a single read of X (the logistic
     Newton step: Hessian weights s, gradient residuals r).
 
-    The thin ``ni,n->i`` cross-moment here is row-additive but NOT
-    bit-stable between the two strategies (XLA reassociates it under
-    fusion) — use an appended design column (``weighted_gram(...,
-    append=)``) when the bit-identity contract matters."""
+    Two regimes for the cross-moment:
+
+      row_block = 0  the thin ``ni,n->i`` mat-vec — the legacy form,
+                     byte-for-byte, and half the FLOPs of a second
+                     Gram (this is the benchmarked hot path: 16 Newton
+                     iterations per logistic fit);
+      row_block > 0  ``Σ v_n da_n`` read off the trailing all-ones
+                     column of a SECOND v-weighted Gram over
+                     ``da = [d | 1]``.  The thin mat-vec compiles to
+                     DIFFERENT reduction tilings inside the chunked
+                     scan body vs the whole lax.map body (measured:
+                     x_learner's blocked propensity fit), so only the
+                     augmented-Gram form keeps chunked ≡ whole exact
+                     on the blocked path.
+
+    Neither form is certified batch-invariant under an executor's
+    replicate vmap — replicate closures read gradients off augmented
+    Grams in inference.numerics instead."""
+    if resolve_row_block(X.shape[0], row_block) == 0:
+        D = design(X, intercept=intercept)
+        ws = wg.astype(jnp.float32)
+        return (jnp.einsum("ni,n,nj->ij", D, ws, D),
+                jnp.einsum("ni,n->i", D, v.astype(jnp.float32)),
+                ws.sum())
+
     def block(Xb, wb, vb):
         D = design(Xb, intercept=intercept)
+        Da = D if intercept else design(Xb, intercept=True)
         ws = wb.astype(jnp.float32)
+        Gv = jnp.einsum("ni,n,nj->ij", Da, vb.astype(jnp.float32), Da)
         return (jnp.einsum("ni,n,nj->ij", D, ws, D),
-                jnp.einsum("ni,n->i", D, vb.astype(jnp.float32)),
+                Gv[: D.shape[1], -1],
                 ws.sum())
 
     return blocked_reduce(block, (X, wg, v), row_block=row_block,
@@ -316,6 +346,25 @@ def residual_weighted_gram(ry: Array, rt: Array, phi: Array, w: Array,
                           strategy=strategy, rules=rules)
 
 
+def _meat_gram(score: Array, e: Array, p: int) -> Array:
+    """``Σ_n e_n² s_n s_nᵀ`` in the batch-invariant form for this p.
+
+    XLA's tiling of the n-contraction is shape-dependent: with a
+    COMPUTED weight (e² is a fused elementwise producer, unlike the
+    plain-input weights of the Gram kernels above) the 3-operand
+    ``ni,n,nj->ij`` einsum tends to keep its reduction order under an
+    added vmap axis at p = 1, while folding e into the score and
+    contracting ``mᵀm`` keeps it at p ≥ 2 (measured on CPU XLA).
+    Dispatch on the static width picks the stabler form per regime; the
+    serial ≡ vmap CONTRACT is certified on the row-blocked path, where
+    the scan barrier makes it shape-robust (tests/test_conformance.py
+    pins it there)."""
+    if p >= 2:
+        m = e[:, None] * score
+        return jnp.einsum("ni,nj->ij", m, m)
+    return jnp.einsum("ni,n,nj->ij", score, jnp.square(e), score)
+
+
 def residual_meat(y: Array, t: Array, my: Array, mt: Array, phi: Array,
                   theta: Array, *, w: Optional[Array] = None,
                   row_block: int = 0, strategy: Optional[str] = None,
@@ -324,7 +373,10 @@ def residual_meat(y: Array, t: Array, my: Array, mt: Array, phi: Array,
     streamed per block — the dense (n, p) moment matrix ``z`` and the
     residual vector never materialize on the blocked path.  The inner
     product uses the small-axis ``(z * theta).sum(-1)`` form (replicate-
-    and chunk-invariant), matching inference.numerics.weighted_theta."""
+    and chunk-invariant); the contraction takes the width-dispatched
+    batch-invariant form (see ``_meat_gram``)."""
+    p = phi.shape[1]
+
     def block(yb, tb, myb, mtb, phib, *rest):
         ry = (yb - myb).astype(jnp.float32)
         rt = (tb - mtb).astype(jnp.float32)
@@ -332,8 +384,113 @@ def residual_meat(y: Array, t: Array, my: Array, mt: Array, phi: Array,
         e = ry - (z * theta[None, :]).sum(axis=1)
         if rest:
             e = rest[0].astype(jnp.float32) * e
-        return jnp.einsum("ni,n,nj->ij", z, jnp.square(e), z)
+        return _meat_gram(z, e, p)
 
     arrays = (y, t, my, mt, phi) + (() if w is None else (w,))
     return blocked_reduce(block, arrays, row_block=row_block,
                           strategy=strategy, rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# Instrumented moments (the orthogonal-IV family, repro.core.iv):
+# M = [rz ⊙ phi | rt ⊙ phi | ry], G = Σ w · m mᵀ.  Every 2SLS-shaped
+# sufficient statistic is a slice of this ONE augmented Gram:
+#   J    = G[:p, p:2p]   Σ w·rz·rt·φφᵀ   (the residual-on-residual
+#                                          instrument moment)
+#   b    = G[:p, 2p]     Σ w·rz·ry·φ     (instrumented cross-moment)
+#   Szz  = G[:p, :p]     Σ w·rz²·φφᵀ     (instrument strength)
+#   Stt  = G[p:2p, p:2p] Σ w·rt²·φφᵀ
+#   bty  = G[p:2p, 2p]   Σ w·rt·ry·φ     (the OLS cross-moment, free)
+# Like every form in this module, cross-moments ride as appended
+# columns of the blocked Gram — bit-identical chunked vs whole.
+# ---------------------------------------------------------------------------
+
+def iv_gram(ry: Array, rt: Array, rz: Array, phi: Array, w: Array, *,
+            row_block: int = 0, strategy: Optional[str] = None,
+            rules=None) -> Tuple[Array, Array]:
+    """Weighted instrumented augmented Gram ``Σ_n w_n m_n m_nᵀ`` with
+    ``m = [rz·phi | rt·phi | ry]`` ((2p+1, 2p+1)) plus ``n_eff = Σ w``.
+    Point fits pass w = 1; bootstrap replicates their resampling
+    weights — both take the same einsum form, so a w=1 replicate is
+    bitwise the point fit."""
+    f32 = jnp.float32
+
+    def block(ryb, rtb, rzb, phib, wb):
+        ph = phib.astype(f32)
+        M = jnp.concatenate(
+            [rzb.astype(f32)[:, None] * ph,
+             rtb.astype(f32)[:, None] * ph,
+             ryb.astype(f32)[:, None]], axis=1)
+        ws = wb.astype(f32)
+        return jnp.einsum("ni,n,nj->ij", M, ws, M), ws.sum()
+
+    return blocked_reduce(block, (ry, rt, rz, phi, w),
+                          row_block=row_block, strategy=strategy,
+                          rules=rules)
+
+
+def iv_slices(Gaug: Array, p: int) -> Tuple[Array, Array, Array, Array]:
+    """(J, b, Szz, Stt) read off an ``iv_gram`` result (see the section
+    comment above for the algebra)."""
+    return (Gaug[:p, p:2 * p], Gaug[:p, 2 * p],
+            Gaug[:p, :p], Gaug[p:2 * p, p:2 * p])
+
+
+def iv_meat(ry: Array, rt: Array, rz: Array, phi: Array, theta: Array,
+            *, w: Optional[Array] = None, row_block: int = 0,
+            strategy: Optional[str] = None, rules=None) -> Array:
+    """HC0 meat of the instrumented moment: ``Σ_n (w_n e_n)² zc_n zc_nᵀ``
+    with score ``zc = rz·phi`` and residual ``e = ry - <rt·phi, theta>``,
+    streamed per block (neither the (n, p) score matrix nor the residual
+    vector materializes on the blocked path).  The inner product uses
+    the small-axis ``(z * theta).sum(-1)`` form and the contraction the
+    width-dispatched batch-invariant form, matching ``residual_meat``."""
+    f32 = jnp.float32
+    p = phi.shape[1]
+
+    def block(ryb, rtb, rzb, phib, *rest):
+        ph = phib.astype(f32)
+        z = rtb.astype(f32)[:, None] * ph
+        e = ryb.astype(f32) - (z * theta[None, :]).sum(axis=1)
+        if rest:
+            e = rest[0].astype(f32) * e
+        if p >= 2:
+            m = e[:, None] * (rzb.astype(f32)[:, None] * ph)
+            return jnp.einsum("ni,nj->ij", m, m)
+        # p = 1: the meat is the plain sum Σ (e·rz·φ)² — elementwise
+        # square + sum, the one contraction-free member of the
+        # invariant vocabulary.  (The 3-operand einsum that is stable
+        # for residual_meat's score here picks up an extra fused
+        # producer and loses batch invariance — measured, and pinned by
+        # tests/test_conformance.py.)
+        m = e * (rzb.astype(f32)[:, None] * ph)[:, 0]
+        return jnp.square(m).sum().reshape(1, 1)
+
+    arrays = (ry, rt, rz, phi) + (() if w is None else (w,))
+    return blocked_reduce(block, arrays, row_block=row_block,
+                          strategy=strategy, rules=rules)
+
+
+def fold_iv_gram(ry: Array, rt: Array, rz: Array, phi: Array,
+                 folds: Array, k: int, *, row_block: int = 0,
+                 strategy: Optional[str] = None, rules=None
+                 ) -> Tuple[Array, Array]:
+    """Fold-segmented instrumented Gram ``Gh[j] = Σ_{n in fold j}
+    m_n m_nᵀ`` ((k, 2p+1, 2p+1)) plus per-fold row counts — the
+    delete-fold jackknife's one pass (LOO identity:
+    ``G_(-j) = Σ_j Gh - Gh[j]``).  Padded fold ids are -1 so they
+    one-hot to the zero row."""
+    f32 = jnp.float32
+
+    def block(ryb, rtb, rzb, phib, fb):
+        ph = phib.astype(f32)
+        M = jnp.concatenate(
+            [rzb.astype(f32)[:, None] * ph,
+             rtb.astype(f32)[:, None] * ph,
+             ryb.astype(f32)[:, None]], axis=1)
+        oh = jax.nn.one_hot(fb, k, dtype=f32)
+        return jnp.einsum("nk,ni,nj->kij", oh, M, M), oh.sum(0)
+
+    return blocked_reduce(block, (ry, rt, rz, phi, folds),
+                          row_block=row_block, strategy=strategy,
+                          rules=rules, pad_values=(0, 0, 0, 0, -1))

@@ -60,7 +60,8 @@ def _aug(X: jax.Array) -> jax.Array:
 # Ridge regression (closed form — one Gram + solve)
 # ---------------------------------------------------------------------------
 
-def make_ridge(lam: float = 1e-3, row_block: int = 0) -> Nuisance:
+def make_ridge(lam: float = 1e-3, row_block: int = 0,
+               strategy: Optional[str] = None) -> Nuisance:
     def init(key, p):
         return {"beta": jnp.zeros((p + 1,), jnp.float32),
                 "lam": jnp.asarray(lam, jnp.float32)}
@@ -72,7 +73,8 @@ def make_ridge(lam: float = 1e-3, row_block: int = 0) -> Nuisance:
         # of the same (optionally row-blocked) Gram reduction.
         q = X.shape[1] + 1
         Gaug, n_eff = moments.weighted_gram(X, w, intercept=True,
-                                            append=y, row_block=row_block)
+                                            append=y, row_block=row_block,
+                                            strategy=strategy)
         n_eff = jnp.maximum(n_eff, 1.0)
         A = Gaug[:q, :q] / n_eff \
             + state["lam"] * jnp.eye(q, dtype=jnp.float32)
@@ -83,7 +85,8 @@ def make_ridge(lam: float = 1e-3, row_block: int = 0) -> Nuisance:
         return _aug(X.astype(jnp.float32)) @ state["beta"]
 
     return Nuisance("ridge", "reg", init, fit, predict,
-                    hyper={"lam": lam, "row_block": row_block})
+                    hyper={"lam": lam, "row_block": row_block,
+                           "strategy": strategy})
 
 
 # ---------------------------------------------------------------------------
@@ -91,7 +94,8 @@ def make_ridge(lam: float = 1e-3, row_block: int = 0) -> Nuisance:
 # ---------------------------------------------------------------------------
 
 def make_logistic(lam: float = 1e-3, iters: int = 16,
-                  row_block: int = 0) -> Nuisance:
+                  row_block: int = 0,
+                  strategy: Optional[str] = None) -> Nuisance:
     def init(key, p):
         return {"beta": jnp.zeros((p + 1,), jnp.float32),
                 "lam": jnp.asarray(lam, jnp.float32)}
@@ -111,7 +115,7 @@ def make_logistic(lam: float = 1e-3, iters: int = 16,
             # Hessian + gradient in ONE weighted-moments pass over X
             H, g_raw, _ = moments.weighted_gram_and_vec(
                 Xf, s, ws * (mu - yt), intercept=True,
-                row_block=row_block)
+                row_block=row_block, strategy=strategy)
             g = g_raw / n_eff + state["lam"] * beta
             return beta - jnp.linalg.solve(H / n_eff + lam_eye, g)
 
@@ -123,7 +127,7 @@ def make_logistic(lam: float = 1e-3, iters: int = 16,
 
     return Nuisance("logistic", "clf", init, fit, predict,
                     hyper={"lam": lam, "iters": iters,
-                           "row_block": row_block})
+                           "row_block": row_block, "strategy": strategy})
 
 
 # ---------------------------------------------------------------------------
@@ -219,20 +223,21 @@ def backbone_features(model, params, tokens: jax.Array,
 # ---------------------------------------------------------------------------
 
 def make_nuisance(kind: str, task: str, cfg: CausalConfig) -> Nuisance:
-    rb = cfg.row_block
+    rb, st = cfg.row_block, cfg.row_block_strategy
     if kind == "ridge":
-        return make_ridge(cfg.ridge_lambda, row_block=rb)
+        return make_ridge(cfg.ridge_lambda, row_block=rb, strategy=st)
     if kind == "logistic":
         return make_logistic(cfg.ridge_lambda, cfg.newton_iters,
-                             row_block=rb)
+                             row_block=rb, strategy=st)
     if kind == "mlp":
         return make_mlp(task, cfg.mlp_hidden, cfg.mlp_steps, cfg.mlp_lr)
     if kind == "backbone":
         # heads over precomputed backbone features; same linear math
         return (make_logistic(cfg.ridge_lambda, cfg.newton_iters,
-                              row_block=rb)
+                              row_block=rb, strategy=st)
                 if task == "clf" else make_ridge(cfg.ridge_lambda,
-                                                 row_block=rb))
+                                                 row_block=rb,
+                                                 strategy=st))
     raise ValueError(f"unknown nuisance kind {kind!r}")
 
 
@@ -253,23 +258,26 @@ def make_nuisance(kind: str, task: str, cfg: CausalConfig) -> Nuisance:
 # ---------------------------------------------------------------------------
 
 def _fold_grams(Xa: jax.Array, folds: jax.Array, k: int,
-                row_block: int = 0):
+                row_block: int = 0, strategy: Optional[str] = None):
     """One-pass fold-segmented Gram: returns (G_heldout (k,p,p),
     G_total (p,p)).  Delegates to the moments engine (row_block > 0
     streams the pass in fixed-order row blocks)."""
-    Gh, _ = moments.fold_gram(Xa, folds, k, row_block=row_block)
+    Gh, _ = moments.fold_gram(Xa, folds, k, row_block=row_block,
+                              strategy=strategy)
     return Gh, Gh.sum(0)
 
 
 def ridge_fit_folds(lam: float, X: jax.Array, y: jax.Array,
-                    folds: jax.Array, k: int, row_block: int = 0):
+                    folds: jax.Array, k: int, row_block: int = 0,
+                    strategy: Optional[str] = None):
     """EXACT per-fold ridge via the LOO identity; one X pass.  The
     target rides as an appended design column of the segmented Gram,
     so the per-fold cross-moments come out of the same reduction."""
     f32 = jnp.float32
     n, p = X.shape[0], X.shape[1] + 1
     Gh_aug, counts = moments.fold_gram(X, folds, k, intercept=True,
-                                       append=y, row_block=row_block)
+                                       append=y, row_block=row_block,
+                                       strategy=strategy)
     G_aug = Gh_aug.sum(0)
     Gh, G = Gh_aug[:, :p, :p], G_aug[:p, :p]
     bh, b_tot = Gh_aug[:, :p, p], G_aug[:p, p]
@@ -281,14 +289,16 @@ def ridge_fit_folds(lam: float, X: jax.Array, y: jax.Array,
 
 
 def logistic_fit_folds(lam: float, iters: int, X: jax.Array, t: jax.Array,
-                       folds: jax.Array, k: int, row_block: int = 0):
+                       folds: jax.Array, k: int, row_block: int = 0,
+                       strategy: Optional[str] = None):
     """Per-fold logistic via fixed-Hessian majorization (Böhning-Lindsay):
     H0_k = Xᵀdiag(w_k)X/4 + λI factored ONCE (LOO identity via one
     moments pass), then ``iters`` MM steps of two matvecs each."""
     f32 = jnp.float32
     Xa = _aug(X.astype(f32))
     n, p = Xa.shape
-    Gh, G = _fold_grams(Xa, folds, k, row_block=row_block)
+    Gh, G = _fold_grams(Xa, folds, k, row_block=row_block,
+                        strategy=strategy)
     onehot = jax.nn.one_hot(folds, k, dtype=f32)            # (n, k)
     w = 1.0 - onehot                                        # train weights
     counts = onehot.sum(0)

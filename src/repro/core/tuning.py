@@ -211,7 +211,40 @@ def tuned_nuisances(cfg: CausalConfig, X, y, t, key) -> Tuple[Nuisance, Nuisance
     rt = tune_penalty("clf" if cfg.discrete_treatment else "reg",
                       lams, X, t, n_folds=cfg.n_folds, key=kt,
                       newton_iters=cfg.newton_iters)
-    ny = make_ridge(ry.best_value)
-    nt = (make_logistic(rt.best_value, cfg.newton_iters)
-          if cfg.discrete_treatment else make_ridge(rt.best_value))
-    return ny, nt
+    return (_tuned_winner(cfg, "reg", ry),
+            _tuned_winner(cfg, "clf" if cfg.discrete_treatment else "reg",
+                          rt))
+
+
+def _tuned_winner(cfg: CausalConfig, task: str, res: TuneResult
+                  ) -> Nuisance:
+    """Build the winning nuisance with the cfg's streaming-memory
+    settings threaded through — tuned winners honor the same row_block
+    contract cfg-built nuisances do."""
+    if task == "clf":
+        return make_logistic(res.best_value, cfg.newton_iters,
+                             row_block=cfg.row_block,
+                             strategy=cfg.row_block_strategy)
+    return make_ridge(res.best_value, row_block=cfg.row_block,
+                      strategy=cfg.row_block_strategy)
+
+
+def tuned_iv_nuisances(cfg: CausalConfig, X, y, t, z, key,
+                       executor="vmap"
+                       ) -> Tuple[Nuisance, Nuisance, Nuisance]:
+    """Grid-tune the orthogonal-IV nuisance triple (E[Y|X], E[T|X],
+    E[Z|X]).  Each penalty sweep is one (trial × fold) ``map_product``
+    grid through the task runtime — three flattened-product programs,
+    not 3·T·K scheduled tasks."""
+    lams = jnp.asarray([1e-4, 1e-3, 1e-2, 1e-1], jnp.float32)
+    ky, kt, kz = jax.random.split(key, 3)
+    ry = tune_penalty("reg", lams, X, y, n_folds=cfg.n_folds, key=ky,
+                      executor=executor)
+    t_task = "clf" if cfg.discrete_treatment else "reg"
+    z_task = "clf" if cfg.discrete_instrument else "reg"
+    rt = tune_penalty(t_task, lams, X, t, n_folds=cfg.n_folds, key=kt,
+                      newton_iters=cfg.newton_iters, executor=executor)
+    rz = tune_penalty(z_task, lams, X, z, n_folds=cfg.n_folds, key=kz,
+                      newton_iters=cfg.newton_iters, executor=executor)
+    return (_tuned_winner(cfg, "reg", ry), _tuned_winner(cfg, t_task, rt),
+            _tuned_winner(cfg, z_task, rz))

@@ -97,6 +97,103 @@ def make_sharded_causal_data(key: jax.Array, n: int, p: int, n_shards: int,
                             p, **kw)
 
 
+# ---------------------------------------------------------------------------
+# Instrumental-variable DGPs (repro.core.iv): unobserved confounding
+# breaks plain DML; a randomized instrument with known compliance
+# structure identifies the LATE.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IVData:
+    """One synthetic IV study with known LATE ground truth.
+
+    Binary-instrument design: Z ~ Bern(sigmoid(c·<a, X>)); complier
+    status C ~ Bern(compliance) i.i.d. (independent of X and the
+    unobserved confounder U, so LATE = E[θ(X) | C=1] = E[θ(X)]);
+    compliers take T = Z, noncompliers take T = Bern(sigmoid(γ·U)) —
+    always/never-takers driven by the CONFOUNDER, which is what biases
+    the naive (non-IV) estimate.  Y = θ(X)·T + <b, X> + γ·U + ε.
+    Exclusion holds by construction (Z never enters Y directly) and
+    monotonicity holds (noncompliers ignore Z)."""
+
+    X: jax.Array            # (n, p) observed covariates
+    z: jax.Array            # (n,) instrument (binary 0/1 or continuous)
+    t: jax.Array            # (n,) treatment
+    y: jax.Array            # (n,) outcome
+    true_late: float        # ground-truth LATE (complier effect)
+    true_cate: jax.Array    # (n,) θ(x_i)
+    complier: jax.Array     # (n,) complier indicator (binary designs)
+    instrument_propensity: jax.Array  # (n,) P(Z=1|X)
+
+    @property
+    def n(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def p(self) -> int:
+        return self.X.shape[1]
+
+
+def make_iv_data(key: jax.Array, n: int, p: int, *,
+                 effect: float = 1.0,
+                 compliance: float = 0.7,
+                 heterogeneous: bool = False,
+                 confounding_strength: float = 1.0,
+                 instrument_strength: float = 1.0,
+                 noise: float = 1.0,
+                 discrete_instrument: bool = True,
+                 n_effect_modifiers: int = 1,
+                 dtype=jnp.float32) -> IVData:
+    """Compliance IV DGP with closed-form LATE.
+
+    discrete_instrument=True  the encouragement design documented on
+                              IVData (binary Z, binary T, LATE =
+                              E[θ(X)] because complier status is
+                              independent of X).
+    discrete_instrument=False continuous Z = <a,X> + N(0,1) and
+                              continuous T = compliance·Z + γ·U + ν —
+                              the partially-linear IV model whose 2SLS
+                              estimand is E[θ(X)] exactly.
+    """
+    kx, ka, kb, kz, kc, kd, ku, ke, kt = jax.random.split(key, 9)
+    X = jax.random.normal(kx, (n, p), dtype)
+    live = min(p, 10)
+    a = jnp.zeros((p,), dtype).at[:live].set(
+        jax.random.normal(ka, (live,), dtype) / jnp.sqrt(live))
+    b = jnp.zeros((p,), dtype).at[:live].set(
+        jax.random.normal(kb, (live,), dtype))
+    U = jax.random.normal(ku, (n,), dtype)      # unobserved confounder
+
+    if heterogeneous:
+        mods = X[:, :n_effect_modifiers]
+        cate = effect * (1.0 + 0.5 * mods.sum(axis=-1))
+    else:
+        cate = jnp.full((n,), effect, dtype)
+
+    if discrete_instrument:
+        prop_z = jax.nn.sigmoid(instrument_strength * (X @ a))
+        z = jax.random.bernoulli(kz, prop_z).astype(dtype)
+        complier = jax.random.bernoulli(kc, compliance, (n,)).astype(dtype)
+        d_nc = jax.random.bernoulli(
+            kd, jax.nn.sigmoid(confounding_strength * U)).astype(dtype)
+        t = complier * z + (1.0 - complier) * d_nc
+        # C ⊥ (X, U) ⇒ LATE = E[θ(X) | C=1] = E[θ(X)]
+        true_late = float(effect) if not heterogeneous else float(cate.mean())
+    else:
+        z = X @ a + jax.random.normal(kz, (n,), dtype)
+        prop_z = jnp.zeros((n,), dtype)
+        complier = jnp.ones((n,), dtype)
+        t = (compliance * z + confounding_strength * U
+             + jax.random.normal(kt, (n,), dtype))
+        true_late = float(effect) if not heterogeneous else float(cate.mean())
+
+    eps = noise * jax.random.normal(ke, (n,), dtype)
+    y = cate * t + X @ b + confounding_strength * U + eps
+    return IVData(X=X, z=z, t=t, y=y, true_late=true_late,
+                  true_cate=cate, complier=complier,
+                  instrument_propensity=prop_z)
+
+
 def paper_demo_data(key: jax.Array, n: int = 100_000, p: int = 500
                     ) -> CausalData:
     """The exact §5.1 listing: y = (1 + .5·x0)·T + x0 + N(0,1),

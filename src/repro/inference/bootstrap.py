@@ -27,7 +27,8 @@ from repro.inference.intervals import InferenceResult
 from repro.inference.numerics import (logistic_fit_folds_w,
                                       predict_folds_linear,
                                       predict_folds_logistic,
-                                      ridge_fit_folds_w, weighted_theta)
+                                      ridge_fit_folds_w,
+                                      weighted_iv_theta, weighted_theta)
 
 SCHEMES = ("pairs", "multiplier", "bayesian")
 
@@ -169,6 +170,156 @@ def dml_bootstrap(nuis_y: Nuisance, nuis_t: Nuisance, *, n_folds: int,
         point=thetas.mean(axis=0) if point is None else point,
         replicates=thetas, se=se, alpha=alpha, point_se=point_se,
         replicate_se=out.get("se"))
+
+
+def iv_theta_once(nuis_y: Nuisance, nuis_t: Nuisance, nuis_z: Nuisance,
+                  n_folds: int, XW: jax.Array, y: jax.Array,
+                  t: jax.Array, z: jax.Array, phi: jax.Array,
+                  key: jax.Array, w: jax.Array, *, with_se: bool = True,
+                  row_block: int = 0) -> Dict[str, jax.Array]:
+    """One full weighted OrthoIV re-estimation (the replicate closure
+    body): folds re-derived from ``key``, the THREE nuisances cross-fit
+    under ``fold_weights * w``, weighted instrumented final stage.
+    Pure, jit/vmap-compatible, built only from the replicate-invariant
+    vocabulary."""
+    kf, ky, kt, kz = jax.random.split(key, 4)
+    folds = fold_ids(kf, XW.shape[0], n_folds)
+    Wk = fold_weights(folds, n_folds) * w[None, :]
+    oof_y = _oof_select(fit_predict_folds(nuis_y, ky, XW, y, Wk,
+                                          row_block), folds)
+    oof_t = _oof_select(fit_predict_folds(nuis_t, kt, XW, t, Wk,
+                                          row_block), folds)
+    oof_z = _oof_select(fit_predict_folds(nuis_z, kz, XW, z, Wk,
+                                          row_block), folds)
+    ry = y.astype(jnp.float32) - oof_y
+    rt = t.astype(jnp.float32) - oof_t
+    rz = z.astype(jnp.float32) - oof_z
+    theta, se = weighted_iv_theta(ry, rt, rz, phi, w, with_se=with_se,
+                                  row_block=row_block)
+    out = {"theta": theta}
+    if se is not None:
+        out["se"] = se
+    return out
+
+
+def iv_bootstrap(nuis_y: Nuisance, nuis_t: Nuisance, nuis_z: Nuisance,
+                 *, n_folds: int, XW: jax.Array, y: jax.Array,
+                 t: jax.Array, z: jax.Array, phi: jax.Array,
+                 key: jax.Array, n_replicates: int = 200,
+                 scheme: str = "pairs", executor="vmap",
+                 alpha: float = 0.05, with_se: bool = True,
+                 point: Optional[jax.Array] = None,
+                 point_se: Optional[jax.Array] = None,
+                 mesh=None, rules=None, row_block: int = 0,
+                 memory_budget: int = 0, chunk: int = 0,
+                 max_retries: int = 2) -> InferenceResult:
+    """B weighted OrthoIV refits through the task runtime — the same
+    chunked, fault-tolerant, replicate-ordered scheduling as
+    dml_bootstrap."""
+    from repro.runtime import as_runtime
+    rt_ = as_runtime(executor, mesh=mesh, rules=rules,
+                     memory_budget=memory_budget, chunk=chunk,
+                     max_retries=max_retries)
+    keys = replicate_keys(key, n_replicates)
+
+    def replicate(kb, XW_, y_, t_, z_, phi_):
+        kw, kfit = jax.random.split(kb)
+        w = bootstrap_weights(kw, XW_.shape[0], scheme)
+        return iv_theta_once(nuis_y, nuis_t, nuis_z, n_folds, XW_, y_,
+                             t_, z_, phi_, kfit, w, with_se=with_se,
+                             row_block=row_block)
+
+    out = rt_.map(replicate, keys, XW, y, t, z, phi, label="iv_bootstrap")
+    thetas = out["theta"]
+    return InferenceResult(
+        method=scheme, executor=rt_.name,
+        point=thetas.mean(axis=0) if point is None else point,
+        replicates=thetas, se=jnp.std(thetas, axis=0, ddof=1),
+        alpha=alpha, point_se=point_se, replicate_se=out.get("se"))
+
+
+def driv_theta_once(nuis_y: Nuisance, nuis_t: Nuisance, nuis_z: Nuisance,
+                    compliance: Nuisance, n_folds: int, XW: jax.Array,
+                    y: jax.Array, t: jax.Array, z: jax.Array,
+                    phi: jax.Array, key: jax.Array, w: jax.Array, *,
+                    cov_clip: float = 0.1, with_se: bool = True,
+                    row_block: int = 0) -> Dict[str, jax.Array]:
+    """One weighted DRIV re-estimation (mirrors DRIV.fit): weighted
+    residual nuisances + weighted compliance fit β(x) = E[rt·rz|X],
+    preliminary weighted constant OrthoIV, pseudo-outcome regression on
+    phi.  Draws the LATE functional (weighted mean ψ) alongside
+    theta."""
+    from repro.core.iv import clip_compliance
+    f32 = jnp.float32
+    n = XW.shape[0]
+    kf, ky, kt, kz, kb = jax.random.split(key, 5)
+    folds = fold_ids(kf, n, n_folds)
+    Wk = fold_weights(folds, n_folds) * w[None, :]
+    oof_y = _oof_select(fit_predict_folds(nuis_y, ky, XW, y, Wk,
+                                          row_block), folds)
+    oof_t = _oof_select(fit_predict_folds(nuis_t, kt, XW, t, Wk,
+                                          row_block), folds)
+    oof_z = _oof_select(fit_predict_folds(nuis_z, kz, XW, z, Wk,
+                                          row_block), folds)
+    ry = y.astype(f32) - oof_y
+    rt = t.astype(f32) - oof_t
+    rz = z.astype(f32) - oof_z
+    oof_b = _oof_select(fit_predict_folds(compliance, kb, XW, rt * rz,
+                                          Wk, row_block), folds)
+    beta = clip_compliance(oof_b, cov_clip)
+    ones = jnp.ones((n, 1), f32)
+    th_pre, _ = weighted_iv_theta(ry, rt, rz, ones, w, with_se=False,
+                                  row_block=row_block)
+    psi = th_pre[0] + (ry - th_pre[0] * rt) * rz / beta
+    theta, se = weighted_theta(psi, jnp.ones((n,), f32), phi, w,
+                               with_se=with_se, row_block=row_block)
+    wf = w.astype(f32)
+    ate = (wf * psi).sum() / jnp.maximum(wf.sum(), 1.0)
+    out = {"theta": theta, "ate": ate}
+    if se is not None:
+        out["se"] = se
+    return out
+
+
+def driv_bootstrap(nuis_y: Nuisance, nuis_t: Nuisance, nuis_z: Nuisance,
+                   compliance: Nuisance, *, n_folds: int, XW: jax.Array,
+                   y: jax.Array, t: jax.Array, z: jax.Array,
+                   phi: jax.Array, key: jax.Array,
+                   n_replicates: int = 200, scheme: str = "pairs",
+                   executor="vmap", alpha: float = 0.05,
+                   cov_clip: float = 0.1, with_se: bool = True,
+                   point: Optional[jax.Array] = None,
+                   point_se: Optional[jax.Array] = None,
+                   ate_point: Optional[float] = None,
+                   mesh=None, rules=None, row_block: int = 0,
+                   memory_budget: int = 0, chunk: int = 0,
+                   max_retries: int = 2) -> InferenceResult:
+    """B weighted DRIV refits through the task runtime; the LATE
+    functional's own draws ride along (ate_interval centers on mean ψ,
+    not theta[0], exactly like dr_bootstrap)."""
+    from repro.runtime import as_runtime
+    rt_ = as_runtime(executor, mesh=mesh, rules=rules,
+                     memory_budget=memory_budget, chunk=chunk,
+                     max_retries=max_retries)
+    keys = replicate_keys(key, n_replicates)
+
+    def replicate(kb, XW_, y_, t_, z_, phi_):
+        kw, kfit = jax.random.split(kb)
+        w = bootstrap_weights(kw, XW_.shape[0], scheme)
+        return driv_theta_once(nuis_y, nuis_t, nuis_z, compliance,
+                               n_folds, XW_, y_, t_, z_, phi_, kfit, w,
+                               cov_clip=cov_clip, with_se=with_se,
+                               row_block=row_block)
+
+    out = rt_.map(replicate, keys, XW, y, t, z, phi,
+                  label="driv_bootstrap")
+    thetas = out["theta"]
+    return InferenceResult(
+        method=scheme, executor=rt_.name,
+        point=thetas.mean(axis=0) if point is None else point,
+        replicates=thetas, se=jnp.std(thetas, axis=0, ddof=1),
+        alpha=alpha, point_se=point_se, replicate_se=out.get("se"),
+        ate_replicates=out["ate"], ate_point=ate_point)
 
 
 def dr_theta_once(outcome: Nuisance, propensity: Nuisance, n_folds: int,

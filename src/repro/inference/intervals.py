@@ -120,6 +120,11 @@ class InferenceResult:
         lo, hi = self.interval(alpha, kind)
         return float(lo[0]), float(hi[0])
 
+    # the IV family's estimand name for the same functional: theta[0]
+    # under the constant basis, or the dedicated draws (DRIV's weighted
+    # mean pseudo-outcome) when the estimator supplied them
+    late_interval = ate_interval
+
     def cate_interval(self, phi: jax.Array, alpha: Optional[float] = None
                       ) -> Tuple[jax.Array, jax.Array]:
         """Pointwise CI bands for phi @ theta.  phi: (n, p_phi) ->

@@ -190,3 +190,43 @@ def weighted_theta(ry: jax.Array, rt: jax.Array, phi: jax.Array,
     cov = jnp.einsum("ia,ab,bj->ij", Ainv, meat, Ainv)
     se = jnp.sqrt(jnp.clip(jnp.diagonal(cov), 0.0, None))
     return theta, se
+
+
+def weighted_iv_theta(ry: jax.Array, rt: jax.Array, rz: jax.Array,
+                      phi: jax.Array, w: jax.Array, *,
+                      ridge: float = 1e-8, with_se: bool = True,
+                      row_block: int = 0, strategy: Optional[str] = None,
+                      rules=None
+                      ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Solve the weighted instrumented orthogonal moment
+    ``Σ w_i rz_i φ_i (ry_i - <theta, φ_i> rt_i) = 0`` (the residual-on-
+    residual 2SLS condition) plus its weighted HC0 sandwich stderr.
+    ry, rt, rz, w: (n,); phi: (n, p_phi).
+
+    All sufficient statistics come off ONE instrumented augmented Gram
+    (``moments.iv_gram``) and one meat pass — replicate-invariant forms
+    only (serial ≡ vmap bitwise, certified on the row-blocked canonical
+    path by tests/test_conformance.py), and w=1 reproduces the point
+    fit exactly."""
+    f32 = jnp.float32
+    p = phi.shape[1]
+    Gaug, n_eff = moments.iv_gram(ry, rt, rz, phi, w,
+                                  row_block=row_block,
+                                  strategy=strategy, rules=rules)
+    J, b, _, _ = moments.iv_slices(Gaug, p)
+    n_eff = jnp.maximum(n_eff, 1.0)
+    # J = Σ w·rz·rt·φφᵀ is symmetric (a signed-weight Gram) but not
+    # PSD; with a relevant instrument its pivots are bounded away from
+    # zero, which is all Gauss-Jordan needs (the weak-instrument F
+    # check in core.refutation screens the degenerate case).
+    A = J + ridge * n_eff * jnp.eye(p, dtype=f32)
+    theta = det_solve(A, b)
+    if not with_se:
+        return theta, None
+    meat = moments.iv_meat(ry, rt, rz, phi, theta, w=w,
+                           row_block=row_block, strategy=strategy,
+                           rules=rules)
+    Ainv = det_inv(A)
+    cov = jnp.einsum("ia,ab,bj->ij", Ainv, meat, Ainv)
+    se = jnp.sqrt(jnp.clip(jnp.diagonal(cov), 0.0, None))
+    return theta, se

@@ -1,11 +1,14 @@
-"""The paper's own workload as a dry-run cell: fold-parallel DML
-(5-fold ridge + logistic cross-fit, orthogonal final stage) at the §5.3
-scale — n = 1M rows x p = 500 covariates — lowered against the
-production mesh with rows sharded over every chip.
+"""The paper's workloads as dry-run cells: fold-parallel DML (5-fold
+ridge + logistic cross-fit, orthogonal final stage) and its
+orthogonal-IV sibling (three cross-fit nuisances + the instrumented
+final stage), at the §5.3 scale — n = 1M rows x p = 500 covariates —
+lowered against the production mesh with rows sharded over every chip.
 
-This is the cell "most representative of the paper's technique" for the
-§Perf hillclimb: C1's K simultaneous fold-fits appear as a leading vmap
-axis; the Gram/Newton reductions are the collectives.
+These are the cells "most representative of the paper's technique" for
+the §Perf hillclimb: C1's K simultaneous fold-fits appear as a leading
+vmap axis; the Gram/Newton reductions are the collectives.  The IV cell
+lowers the SAME shared engines (crossfit_one ×3 + moments.iv_gram), so
+the two estimands differ only in which moments the final stage reads.
 """
 from __future__ import annotations
 
@@ -18,6 +21,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.config import CausalConfig
 from repro.core.crossfit import crossfit_parallel, crossfit_parallel_loo
 from repro.core.final_stage import cate_basis, fit_final_stage
+from repro.core.iv import fit_iv_final_stage
 from repro.core.nuisance import make_nuisance
 
 N_ROWS = 1_048_576  # the paper's "1 Million", padded to 2^20 so rows
@@ -59,26 +63,70 @@ def make_dml_step(cfg: CausalConfig, engine: str = "parallel",
     return dml_fit
 
 
-def input_specs(n: int = N_ROWS, p: int = N_COVARIATES):
+def make_iv_step(cfg: CausalConfig, engine: str = "parallel",
+                 rules=None):
+    """One full OrthoIV fit as a single jittable program: the same
+    shared crossfit engine run for THREE nuisances (E[Y|X], E[T|X],
+    E[Z|X]) plus the instrumented final stage (moments.iv_gram /
+    iv_meat) — the IV workload lowered the exact way the DML cell is."""
+    ridge = make_nuisance(cfg.nuisance_y, "reg", cfg)
+    logit_t = make_nuisance(cfg.nuisance_t,
+                            "clf" if cfg.discrete_treatment else "reg",
+                            cfg)
+    logit_z = make_nuisance(cfg.nuisance_z,
+                            "clf" if cfg.discrete_instrument else "reg",
+                            cfg)
+
+    def iv_fit(X, y, t, z, folds):
+        k = cfg.n_folds
+        key = jax.random.PRNGKey(0)
+        cf = (crossfit_parallel_loo if engine == "parallel_loo"
+              else crossfit_parallel)
+        my, _ = cf(ridge, key, X, y, folds, k, rules)
+        mt, _ = cf(logit_t, key, X, t, folds, k, rules)
+        mz, _ = cf(logit_z, key, X, z, folds, k, rules)
+        f32 = jnp.float32
+        ry = y.astype(f32) - my
+        rt = t.astype(f32) - mt
+        rz = z.astype(f32) - mz
+        phi = cate_basis(X, cfg.cate_features)
+        fs = fit_iv_final_stage(ry, rt, rz, phi,
+                                row_block=cfg.row_block,
+                                strategy=cfg.row_block_strategy,
+                                rules=rules)
+        return fs.theta, fs.cov
+
+    return iv_fit
+
+
+def input_specs(n: int = N_ROWS, p: int = N_COVARIATES,
+                with_instrument: bool = False):
     f32, i32 = jnp.float32, jnp.int32
-    return {
+    specs = {
         "X": jax.ShapeDtypeStruct((n, p), f32),
         "y": jax.ShapeDtypeStruct((n,), f32),
         "t": jax.ShapeDtypeStruct((n,), f32),
         "folds": jax.ShapeDtypeStruct((n,), i32),
     }
+    if with_instrument:
+        specs["z"] = jax.ShapeDtypeStruct((n,), f32)
+    return specs
 
 
-def row_sharding(mesh: Mesh) -> Dict[str, NamedSharding]:
+def row_sharding(mesh: Mesh, with_instrument: bool = False
+                 ) -> Dict[str, NamedSharding]:
     """Rows shard over EVERY mesh axis jointly (the paper's one giant
     data axis; folds batch inside the program)."""
     axes = tuple(mesh.axis_names)
-    return {
+    sh = {
         "X": NamedSharding(mesh, P(axes, None)),
         "y": NamedSharding(mesh, P(axes)),
         "t": NamedSharding(mesh, P(axes)),
         "folds": NamedSharding(mesh, P(axes)),
     }
+    if with_instrument:
+        sh["z"] = NamedSharding(mesh, P(axes))
+    return sh
 
 
 def lower_dml_cell(mesh: Mesh, cfg: CausalConfig = None,
@@ -94,4 +142,24 @@ def lower_dml_cell(mesh: Mesh, cfg: CausalConfig = None,
             step,
             in_shardings=(sh["X"], sh["y"], sh["t"], sh["folds"]),
         ).lower(specs["X"], specs["y"], specs["t"], specs["folds"])
+    return lowered
+
+
+def lower_iv_cell(mesh: Mesh, cfg: CausalConfig = None,
+                  n: int = N_ROWS, p: int = N_COVARIATES,
+                  engine: str = "parallel", rules=None):
+    """The OrthoIV workload against the production mesh: identical row
+    sharding plus the instrument column."""
+    cfg = cfg or CausalConfig(n_folds=5, cate_features=1)
+    step = make_iv_step(cfg, engine, rules)
+    specs = input_specs(n, p, with_instrument=True)
+    sh = row_sharding(mesh, with_instrument=True)
+    from repro.distributed.sharding import mesh_context
+    with mesh_context(mesh):
+        lowered = jax.jit(
+            step,
+            in_shardings=(sh["X"], sh["y"], sh["t"], sh["z"],
+                          sh["folds"]),
+        ).lower(specs["X"], specs["y"], specs["t"], specs["z"],
+                specs["folds"])
     return lowered

@@ -1,17 +1,17 @@
 """Streaming sufficient-statistics engine (repro.core.moments): the
-bit-identity contract between the chunked and whole blocked strategies,
-legacy-form equivalence at row_block=0, estimator invariance across
-row_block settings, and the no-dense-moment-matrix memory claim of the
-chunked final stage."""
+bit-identity contract between the chunked and whole blocked strategies
+at the KERNEL level, legacy-form equivalence at row_block=0, and the
+no-dense-moment-matrix memory claim of the chunked final stage.
+
+Estimator-level row_block invariance and executor bit-identity moved to
+the cross-estimator conformance suite (tests/test_conformance.py over
+tests/conformance.py's registry)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.config import CausalConfig
 from repro.core import moments
-from repro.core.dml import DML
-from repro.core.drlearner import DRLearner
 from repro.core.final_stage import cate_basis, fit_final_stage
 from repro.data.causal_dgp import make_causal_data
 
@@ -140,59 +140,6 @@ def test_final_stage_chunked_equals_whole_bitwise(key):
                          strategy="whole")
     np.testing.assert_array_equal(np.asarray(fc.theta), np.asarray(fw.theta))
     np.testing.assert_array_equal(np.asarray(fc.cov), np.asarray(fw.cov))
-
-
-@pytest.mark.parametrize("row_block", [192, 512])
-def test_dml_estimates_invariant_across_row_block(key, row_block):
-    """Property: the estimator is row_block-invariant up to float
-    reassociation — same data, same folds, same answer."""
-    d = make_causal_data(jax.random.PRNGKey(3), 3000, 8, effect=1.0)
-    r0 = DML(CausalConfig(n_folds=4)).fit(d.y, d.t, d.X, key=key)
-    rb = DML(CausalConfig(n_folds=4, row_block=row_block)).fit(
-        d.y, d.t, d.X, key=key)
-    np.testing.assert_allclose(np.asarray(r0.theta), np.asarray(rb.theta),
-                               rtol=2e-4, atol=2e-5)
-    np.testing.assert_allclose(np.asarray(r0.stderr), np.asarray(rb.stderr),
-                               rtol=2e-3, atol=2e-6)
-
-
-def test_dml_loo_engine_invariant_across_row_block(key):
-    d = make_causal_data(jax.random.PRNGKey(5), 2500, 6, effect=1.0)
-    r0 = DML(CausalConfig(n_folds=4, engine="parallel_loo")).fit(
-        d.y, d.t, d.X, key=key)
-    rb = DML(CausalConfig(n_folds=4, engine="parallel_loo",
-                          row_block=300)).fit(d.y, d.t, d.X, key=key)
-    np.testing.assert_allclose(np.asarray(r0.theta), np.asarray(rb.theta),
-                               rtol=2e-4, atol=2e-5)
-
-
-def test_drlearner_invariant_across_row_block(key):
-    d = make_causal_data(jax.random.PRNGKey(9), 2500, 6, effect=1.0)
-    r0 = DRLearner(CausalConfig(n_folds=3, inference="none")).fit(
-        d.y, d.t, d.X, key=key)
-    rb = DRLearner(CausalConfig(n_folds=3, inference="none",
-                                row_block=256)).fit(d.y, d.t, d.X, key=key)
-    assert abs(r0.ate - rb.ate) < 1e-3
-    np.testing.assert_allclose(np.asarray(r0.theta), np.asarray(rb.theta),
-                               rtol=2e-4, atol=2e-5)
-
-
-def test_bootstrap_serial_vmap_bit_identical_chunked(key):
-    """The executor bit-identity contract survives row blocking: the
-    chunked moments passes are built from the same invariant einsum
-    vocabulary, and scan commutes with the replicate vmap."""
-    from repro.core.nuisance import make_logistic, make_ridge
-    from repro.inference import dml_bootstrap
-    d = make_causal_data(jax.random.PRNGKey(11), 1500, 6, effect=1.0)
-    phi = cate_basis(d.X, 2)
-    kw = dict(n_folds=3, XW=d.X, y=d.y, t=d.t, phi=phi,
-              key=jax.random.PRNGKey(2), n_replicates=4, row_block=256)
-    ny = make_ridge(1e-3, row_block=256)
-    nt = make_logistic(1e-3, 8, row_block=256)
-    r_ser = dml_bootstrap(ny, nt, executor="serial", **kw)
-    r_vec = dml_bootstrap(ny, nt, executor="vmap", **kw)
-    np.testing.assert_array_equal(np.asarray(r_ser.replicates),
-                                  np.asarray(r_vec.replicates))
 
 
 def test_jackknife_segmented_matches_direct_weighted_fit(key):
