@@ -2,8 +2,8 @@
 committed BENCH_baseline.json and fail on slowdowns past the threshold.
 
 Only entries whose name starts with a gated prefix participate
-(crossfit / bootstrap / final_stage / iv — the perf wins of PRs 1-4
-this gate locks in); other entries are informational.  A gated baseline
+(crossfit / bootstrap / final_stage / iv / sweep — the perf wins of
+PRs 1-5 this gate locks in); other entries are informational.  A gated baseline
 entry MISSING from the new results also fails: silently dropping a
 benchmark is how regressions hide.
 
@@ -23,7 +23,7 @@ import argparse
 import json
 import sys
 
-GATED_PREFIXES = ("crossfit", "bootstrap", "final_stage", "iv")
+GATED_PREFIXES = ("crossfit", "bootstrap", "final_stage", "iv", "sweep")
 
 
 def load_entries(path: str) -> dict:

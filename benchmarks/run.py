@@ -114,6 +114,15 @@ def main(argv=None):
     else:
         bench_runtime.run(B=2000, csv=rec)
 
+    print("# --- segment sweep: serial loop vs batched panel (E=64) ---")
+    from benchmarks import bench_sweep
+    if args.full:
+        bench_sweep.run(n=65_536, p=50, n_folds=5, csv=rec)
+    elif args.smoke:
+        bench_sweep.run(n=8192, csv=rec)
+    else:
+        bench_sweep.run(csv=rec)
+
     if not args.smoke:
         print("# --- kernel micro-benchmarks ---")
         from benchmarks import bench_kernels

@@ -1,0 +1,75 @@
+"""Segment-parallel sweep demo: estimate one effect PER user segment —
+the paper's many-cohorts workload — as batched programs, then compare
+against the practitioner's groupby loop.
+
+Run: PYTHONPATH=src python examples/sweep_demo.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.sweep_synthetic import SWEEP
+from repro.data.causal_dgp import make_causal_data
+from repro.sweep import SweepSpec, serial_loop, sweep
+
+N, P, E = 16_384, 10, 16
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    data = make_causal_data(key, N, P, effect=1.0, heterogeneous=True)
+    # synthetic cohort assignment (in production: a user-segment column)
+    sids = jax.random.randint(jax.random.fold_in(key, 1), (N,), 0, E)
+
+    cfg = dataclasses.replace(SWEEP, n_folds=3, row_block=1024)
+    cfg_ci = dataclasses.replace(cfg, inference="bootstrap", n_bootstrap=32)
+
+    # two columns: a fast point sweep + a bootstrap-CI sweep — the CI
+    # column's (cell x replicate) axes run through runtime.map_product
+    spec = SweepSpec(n_segments=E, columns=(("dml", cfg), ("dml", cfg_ci)),
+                     segment_key=SWEEP.segment_key)
+
+    t0 = time.perf_counter()
+    panel = sweep(spec, X=data.X, y=data.y, t=data.t, segment_ids=sids,
+                  key=key, executor="vmap")
+    jax.block_until_ready(panel.columns[0].thetas)
+    print(f"batched panel ({spec.n_cells} cells): "
+          f"{time.perf_counter() - t0:.2f}s")
+    print(panel.summary())
+
+    # per-segment ATEs with bootstrap CIs
+    ci = panel.columns[1]
+    print("\nper-segment ATE [bootstrap 95% CI]:")
+    for s in range(E):
+        print(f"  segment {s:2d} (n={int(panel.counts[s]):5d}): "
+              f"{float(ci.ates[s]):+.3f} "
+              f"[{float(ci.ci_lo[s]):+.3f}, {float(ci.ci_hi[s]):+.3f}]")
+
+    # the loop the panel replaces — and certifies against, bitwise
+    t0 = time.perf_counter()
+    loop = serial_loop("dml", cfg, X=data.X, y=data.y, t=data.t,
+                       segment_ids=sids, n_segments=E, key=key)
+    jax.block_until_ready(loop["theta"])
+    t_loop = time.perf_counter() - t0
+    same = np.array_equal(np.asarray(panel.columns[0].thetas),
+                          np.asarray(loop["theta"]))
+    print(f"\nserial loop of {E} single fits: {t_loop:.2f}s; "
+          f"panel == loop bitwise: {same}")
+
+    # the one-pass segmented execution (shared fold draw, LOO kernels)
+    t0 = time.perf_counter()
+    seg = sweep(SweepSpec(n_segments=E, columns=(("dml", cfg),)),
+                X=data.X, y=data.y, t=data.t, segment_ids=sids, key=key,
+                mode="segmented")
+    jax.block_until_ready(seg.columns[0].thetas)
+    print(f"segmented one-pass sweep: {time.perf_counter() - t0:.2f}s "
+          f"(mean |Δ| vs cells "
+          f"{float(jnp.abs(seg.columns[0].ates - panel.columns[0].ates).mean()):.3f} "
+          f"— a different fold draw, same estimator)")
+
+
+if __name__ == "__main__":
+    main()

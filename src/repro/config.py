@@ -277,6 +277,15 @@ class CausalConfig:
     runtime_memory_budget: int = 0
     runtime_chunk: int = 0        # explicit chunk size; 0 = auto from budget
     runtime_max_retries: int = 2  # per-chunk backend-downgrade attempts
+    # --- segment-parallel sweeps (repro.sweep) ---
+    # Name of the cohort/segment column in the caller's frame — pure
+    # provenance carried into EffectPanel summaries ("" = unsegmented);
+    # the sweep engine itself takes the integer segment-id array.
+    segment_key: str = ""
+    # Max sweep cells batched per compiled program (the segment × config
+    # axis); 0 defers to runtime_chunk / the memory model.  Bounds the
+    # (cells, n) live mask/weight activations at industrial n.
+    sweep_chunk: int = 0
 
 
 def smoke_variant(cfg: ModelConfig, **overrides: Any) -> ModelConfig:

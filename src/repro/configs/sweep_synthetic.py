@@ -1,0 +1,35 @@
+"""The many-cohorts sweep case study: E per-segment effect estimates
+per run (repro.sweep) on the synthetic DGP.
+
+The paper's workload is many estimations fanned out on Ray — per user
+segment, treatment cohort, and config variant (the shape Netflix's
+Computational Causal Inference agenda and Amazon's DML-at-scale
+pipeline both batch).  This preset pins the paper-faithful estimator
+settings for that grid; ``examples/sweep_demo.py`` and
+``benchmarks/bench_sweep.py`` consume it.
+"""
+from repro.config import CausalConfig
+
+# Per-cell estimator settings: DML with 5-fold cross-fitting, constant
+# CATE basis -> one ATE per segment, cells chunked through the runtime
+# in blocks of 16 so the (cells, n) live weights stay bounded at
+# industrial n.  segment_key names the cohort column in the caller's
+# frame (provenance carried into EffectPanel summaries).
+SWEEP = CausalConfig(
+    n_folds=5,
+    nuisance_y="ridge",
+    nuisance_t="logistic",
+    final_stage="linear",
+    cate_features=1,
+    discrete_treatment=True,
+    engine="parallel",
+    inference="none",          # point sweep; flip to "bootstrap" for CIs
+    segment_key="segment",
+    sweep_chunk=16,
+)
+
+# The bench grid: E=64 segments (bench_sweep's acceptance shape) at
+# CPU-friendly rows; --full raises rows toward the paper's scales.
+N_SEGMENTS = 64
+SCALES = (16_384, 65_536, 1_048_576)
+N_COVARIATES = 50

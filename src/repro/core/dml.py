@@ -12,11 +12,16 @@ Usage (mirrors the paper's §5.1 listing):
     res.ate, res.stderr, res.cate(X_new)
     res.ate_interval()            # B=cfg.n_bootstrap replicates, one
     res.cate_interval(X_new)      # vmapped program (repro.inference)
+
+The fit -> inference plumbing (interval methods, replicate caching,
+analytic fallbacks) lives in the shared base layer
+``repro.core.estimator``; this module supplies only the DML-specific
+pieces: the fit program and the replicate-inference dispatch.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +29,8 @@ import jax.numpy as jnp
 from repro.config import CausalConfig
 from repro.core.crossfit import CrossfitResult, crossfit
 from repro.core.estimands import Diagnostics, compute_diagnostics
+from repro.core.estimator import (SandwichEffectResult, inf_cache_field,
+                                  resolve_scheme)
 from repro.core.final_stage import FinalStageResult, cate_basis, fit_final_stage
 from repro.core.nuisance import Nuisance, make_nuisance
 
@@ -44,7 +51,7 @@ class FitContext:
 
 
 @dataclasses.dataclass(frozen=True)
-class DMLResult:
+class DMLResult(SandwichEffectResult):
     theta: jax.Array             # (p_phi,) final-stage coefficients
     cov: jax.Array               # (p_phi, p_phi)
     cfg: CausalConfig
@@ -52,121 +59,38 @@ class DMLResult:
     final: FinalStageResult
     diagnostics: Diagnostics
     fit_ctx: Optional[FitContext] = None
-    _inf_cache: Dict[Any, Any] = dataclasses.field(
-        default_factory=dict, repr=False, compare=False)
+    _inf_cache: Dict[Any, Any] = inf_cache_field()
 
-    @property
-    def ate(self) -> float:
-        """With phi = [1, x...], theta[0] is the effect at x = 0; for the
-        constant basis it IS the ATE.  For heterogeneous bases use
-        ``cate(X).mean()``."""
-        return float(self.theta[0])
+    estimator_name = "DML"
 
-    @property
-    def stderr(self) -> jax.Array:
-        return jnp.sqrt(jnp.diag(self.cov))
-
-    def cate(self, X: jax.Array) -> jax.Array:
-        phi = cate_basis(X, self.cfg.cate_features)
-        return phi @ self.theta
-
-    def ate_of(self, X: jax.Array) -> float:
-        return float(self.cate(X).mean())
-
-    def conf_int(self, alpha: float = 0.05):
-        from repro.inference.intervals import z_crit
-        se = self.stderr
-        z = z_crit(alpha)
-        return self.theta - z * se, self.theta + z * se
-
-    # -- uncertainty quantification (repro.inference) -------------------
-    def inference(self, *, method: Optional[str] = None,
-                  n_bootstrap: Optional[int] = None,
-                  executor: Optional[str] = None,
-                  alpha: Optional[float] = None):
-        """Replicate-based inference, computed lazily and cached.  The B
-        re-estimations run as ONE program through the configured
-        Executor (cfg.inference_executor); ``method`` overrides
-        cfg.inference (bootstrap | multiplier | jackknife).  The
-        replicates are alpha-independent, so alpha is NOT part of the
-        cache key — a new level re-quantiles the stored draws."""
-        from repro.inference import (delete_fold_jackknife, dml_bootstrap)
-        if self.fit_ctx is None:
-            raise ValueError("result carries no fit context; re-fit with "
-                             "DML.fit to enable replicate inference")
-        method = method or self.cfg.inference
-        if method in ("none", ""):
-            raise ValueError("cfg.inference='none'; pass method= to force")
-        n_boot = n_bootstrap or self.cfg.n_bootstrap
-        exe = executor or self.cfg.inference_executor
-        a = self.cfg.alpha if alpha is None else alpha
-        cache_key = (method, n_boot, exe)
-        if cache_key in self._inf_cache:
-            return self._inf_cache[cache_key]
+    def _replicate_inference(self, method, n_boot, exe, alpha):
+        """Replicate re-estimation through the task runtime: delete-fold
+        jackknife off the existing fold states, or B weighted refits
+        (pairs/multiplier bootstrap) as one batched program."""
+        from repro.inference import delete_fold_jackknife, dml_bootstrap
         ctx = self.fit_ctx
-        rt_kw = dict(memory_budget=self.cfg.runtime_memory_budget,
-                     chunk=self.cfg.runtime_chunk,
-                     max_retries=self.cfg.runtime_max_retries)
+        rt_kw = self._runtime_kwargs()
         if method == "jackknife":
             cf = self.crossfit
-            res = delete_fold_jackknife(
+            return delete_fold_jackknife(
                 ctx.y, ctx.t, cf.oof_y, cf.oof_t, cf.folds, ctx.phi,
-                self.cfg.n_folds, alpha=a, executor=exe,
+                self.cfg.n_folds, alpha=alpha, executor=exe,
                 point=self.theta, point_se=self.stderr, rules=ctx.rules,
                 row_block=self.cfg.row_block, **rt_kw)
-        else:
-            scheme = "pairs" if method == "bootstrap" else method
-            res = dml_bootstrap(
-                ctx.nuis_y, ctx.nuis_t, n_folds=self.cfg.n_folds,
-                XW=ctx.XW, y=ctx.y, t=ctx.t, phi=ctx.phi,
-                key=jax.random.fold_in(ctx.key, 0x0b00), alpha=a,
-                n_replicates=n_boot, scheme=scheme, executor=exe,
-                point=self.theta, point_se=self.stderr, rules=ctx.rules,
-                row_block=self.cfg.row_block, **rt_kw)
-        self._inf_cache[cache_key] = res
-        return res
+        return dml_bootstrap(
+            ctx.nuis_y, ctx.nuis_t, n_folds=self.cfg.n_folds,
+            XW=ctx.XW, y=ctx.y, t=ctx.t, phi=ctx.phi,
+            key=jax.random.fold_in(ctx.key, 0x0b00), alpha=alpha,
+            n_replicates=n_boot, scheme=resolve_scheme(method),
+            executor=exe, point=self.theta, point_se=self.stderr,
+            rules=ctx.rules, row_block=self.cfg.row_block, **rt_kw)
 
-    def ate_interval(self, alpha: Optional[float] = None,
-                     kind: str = "percentile") -> Tuple[float, float]:
-        """(lo, hi) CI for the ATE (theta[0] under the constant basis)
-        from cfg.n_bootstrap replicate re-estimations.  Falls back to
-        the analytic sandwich CI when cfg.inference == 'none'."""
-        a = self.cfg.alpha if alpha is None else alpha
-        if self.cfg.inference in ("none", "") or self.fit_ctx is None:
-            lo, hi = self.conf_int(a)
-            return float(lo[0]), float(hi[0])
-        return self.inference(alpha=a).ate_interval(a, kind)
-
-    def cate_interval(self, X: jax.Array, alpha: Optional[float] = None
-                      ) -> Tuple[jax.Array, jax.Array]:
-        """Pointwise (lo, hi) bands for theta(x) = <phi(x), theta>."""
-        from repro.inference.intervals import z_crit
-        a = self.cfg.alpha if alpha is None else alpha
-        phi = cate_basis(X, self.cfg.cate_features)
-        if self.cfg.inference in ("none", "") or self.fit_ctx is None:
-            z = z_crit(a)
-            se = jnp.sqrt(jnp.clip(jnp.einsum(
-                "ni,ij,nj->n", phi, self.cov, phi), 0.0, None))
-            c = phi @ self.theta
-            return c - z * se, c + z * se
-        return self.inference(alpha=a).cate_interval(phi, a)
-
-    def summary(self) -> str:
-        lo, hi = self.conf_int()
-        lines = ["DML result", "-" * 46,
-                 f"{'coef':>4} {'point':>10} {'stderr':>10} "
-                 f"{'ci_lo':>9} {'ci_hi':>9}"]
-        for i in range(self.theta.shape[0]):
-            lines.append(f"θ[{i}] {float(self.theta[i]):>10.4f} "
-                         f"{float(self.stderr[i]):>10.4f} "
-                         f"{float(lo[i]):>9.4f} {float(hi[i]):>9.4f}")
+    def _summary_extra(self):
         d = self.diagnostics
-        lines += ["-" * 46,
-                  f"ortho-moment |E[e·rt]| = {d.ortho_moment:.2e}",
-                  f"overlap: propensity in [{d.min_propensity:.3f}, "
-                  f"{d.max_propensity:.3f}]",
-                  f"nuisance R²(y) = {d.nuisance_r2_y:.3f}"]
-        return "\n".join(lines)
+        return (f"ortho-moment |E[e·rt]| = {d.ortho_moment:.2e}",
+                f"overlap: propensity in [{d.min_propensity:.3f}, "
+                f"{d.max_propensity:.3f}]",
+                f"nuisance R²(y) = {d.nuisance_r2_y:.3f}")
 
 
 class DML:

@@ -12,11 +12,15 @@ with cross-fit outcome models m_t(x) = E[Y|X,T=t] and propensity
 e(x) = P(T=1|X).  ATE = mean(ψ); CATE = regress ψ on phi(x).
 Consistent if EITHER the outcome models or the propensity is consistent
 (double robustness).
+
+Interval/caching plumbing comes from ``repro.core.estimator``
+(PseudoOutcomeEffectResult); this module keeps only the AIPW program
+and its bootstrap dispatch.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,91 +28,44 @@ import jax.numpy as jnp
 from repro.config import CausalConfig
 from repro.core import moments
 from repro.core.crossfit import fold_ids, fold_weights, _oof_select
+from repro.core.estimator import (PseudoOutcomeEffectResult,
+                                  inf_cache_field, resolve_scheme)
 from repro.core.final_stage import cate_basis
 from repro.core.nuisance import Nuisance, make_logistic, make_ridge
 
 
 @dataclasses.dataclass(frozen=True)
-class DRResult:
+class DRResult(PseudoOutcomeEffectResult):
     ate: float
     stderr: float
     theta: jax.Array          # CATE coefficients on phi(x)
     pseudo: jax.Array         # (n,) AIPW pseudo-outcomes
     cfg: Optional[CausalConfig] = None
     fit_ctx: Optional[Dict[str, Any]] = None
-    _inf_cache: Dict[Any, Any] = dataclasses.field(
-        default_factory=dict, repr=False, compare=False)
+    _inf_cache: Dict[Any, Any] = inf_cache_field()
 
-    def cate(self, X: jax.Array, n_features: int) -> jax.Array:
-        return cate_basis(X, n_features) @ self.theta
+    estimator_name = "DRLearner"
 
-    def conf_int(self, z: float = 1.96):
-        return self.ate - z * self.stderr, self.ate + z * self.stderr
+    def _resolve_method(self, method):
+        # DR has no fold-state shortcut; a delete-fold jackknife would
+        # silently be a different estimator, so substitute the bootstrap
+        return "bootstrap" if method == "jackknife" else method
 
-    # -- uncertainty quantification (repro.inference) -------------------
-    def inference(self, *, n_bootstrap: Optional[int] = None,
-                  executor: Optional[str] = None,
-                  alpha: Optional[float] = None,
-                  method: Optional[str] = None):
+    def _replicate_inference(self, method, n_boot, exe, alpha):
         """Bootstrap the whole AIPW pipeline (nuisances + pseudo-outcome
-        regression) as one executor-dispatched program; cached (the B
-        re-estimations are alpha-independent, so alpha is NOT part of
-        the cache key — new levels re-quantile the stored draws)."""
+        regression) as one runtime-scheduled program (the ATE
+        functional's own draws ride along)."""
         from repro.inference import dr_bootstrap
-        if self.fit_ctx is None:
-            raise ValueError("result carries no fit context; re-fit with "
-                             "DRLearner.fit to enable replicate inference")
-        cfg = self.cfg or CausalConfig()
-        method = method or cfg.inference
-        if method in ("none", ""):
-            raise ValueError("cfg.inference='none'; pass method= to force")
-        if method == "jackknife":
-            method = "bootstrap"  # DR has no fold-state shortcut
-        scheme = "pairs" if method == "bootstrap" else method
-        n_boot = n_bootstrap or cfg.n_bootstrap
-        exe = executor or cfg.inference_executor
-        a = cfg.alpha if alpha is None else alpha
-        ck = (scheme, n_boot, exe)
-        if ck in self._inf_cache:
-            return self._inf_cache[ck]
+        cfg = self._config()
         ctx = self.fit_ctx
-        res = dr_bootstrap(
+        return dr_bootstrap(
             ctx["outcome"], ctx["propensity"], n_folds=cfg.n_folds,
             X=ctx["X"], y=ctx["y"], t=ctx["t"], phi=ctx["phi"],
-            key=jax.random.fold_in(ctx["key"], 0x0b00), alpha=a,
-            n_replicates=n_boot, scheme=scheme, executor=exe,
-            clip=ctx["clip"], point=self.theta, ate_point=self.ate,
-            row_block=cfg.row_block,
-            memory_budget=cfg.runtime_memory_budget,
-            chunk=cfg.runtime_chunk,
-            max_retries=cfg.runtime_max_retries)
-        self._inf_cache[ck] = res
-        return res
-
-    def ate_interval(self, alpha: Optional[float] = None,
-                     kind: str = "percentile") -> Tuple[float, float]:
-        """CI for the AIPW ATE (= mean pseudo-outcome): bootstrap draws
-        of the same functional, or the analytic normal CI when
-        inference is disabled."""
-        from repro.inference.intervals import z_crit
-        cfg = self.cfg or CausalConfig()
-        a = cfg.alpha if alpha is None else alpha
-        if self.fit_ctx is None or cfg.inference in ("none", ""):
-            z = z_crit(a)
-            return self.ate - z * self.stderr, self.ate + z * self.stderr
-        return self.inference(alpha=a).ate_interval(a, kind)
-
-    def cate_interval(self, X: jax.Array, alpha: Optional[float] = None
-                      ) -> Tuple[jax.Array, jax.Array]:
-        cfg = self.cfg or CausalConfig()
-        if self.fit_ctx is None or cfg.inference in ("none", ""):
-            raise ValueError(
-                "cate_interval needs replicate inference (DRResult has "
-                "no coefficient covariance); set cfg.inference or call "
-                ".inference(method=...) explicitly")
-        a = cfg.alpha if alpha is None else alpha
-        phi = cate_basis(X, cfg.cate_features)
-        return self.inference(alpha=a).cate_interval(phi, a)
+            key=jax.random.fold_in(ctx["key"], 0x0b00), alpha=alpha,
+            n_replicates=n_boot, scheme=resolve_scheme(method),
+            executor=exe, clip=ctx["clip"], point=self.theta,
+            ate_point=self.ate, row_block=cfg.row_block,
+            **self._runtime_kwargs())
 
 
 class DRLearner:

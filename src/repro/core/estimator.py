@@ -1,0 +1,301 @@
+"""The shared estimator base layer: one copy of the fit -> inference
+plumbing every estimator result used to carry privately.
+
+Before this module, DMLResult / DRResult / OrthoIVResult / DRIVResult
+each held a near-identical ~80-line block: resolve the inference method
+and replicate count from the CausalConfig, cache InferenceResults by
+(method, B, executor), fall back to analytic CIs when inference is
+disabled, and project replicate draws through the ATE / CATE
+functionals.  ``EffectResult`` owns all of that once; estimators plug in
+only the genuinely estimator-specific piece — how to run one batch of
+replicate re-estimations (``_replicate_inference``) — plus optional
+analytic fallbacks.
+
+Two concrete flavors cover the catalogue:
+
+  SandwichEffectResult       theta + HC0 covariance (DML, OrthoIV):
+                             analytic per-coefficient CIs come free from
+                             the sandwich; ``ate`` is theta[0] under the
+                             constant basis.
+  PseudoOutcomeEffectResult  scalar ATE = mean pseudo-outcome plus a
+                             theta projection of the pseudo-outcome on
+                             phi (DRLearner, DRIV): analytic ATE CI from
+                             the pseudo-outcome se; CATE bands require
+                             replicate inference.
+
+Metalearner results subclass ``EffectResult`` directly (their CATE is
+not linear in a phi basis, so only the ATE functional carries
+intervals).  ``CausalEstimator`` is the facade protocol the registry
+(repro.core.registry) and the sweep subsystem (repro.sweep) consume.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import CausalConfig
+from repro.core.final_stage import cate_basis
+
+
+def resolve_scheme(method: str) -> str:
+    """Inference-method name -> bootstrap weight scheme ("bootstrap" is
+    the user-facing name for the pairs scheme)."""
+    return "pairs" if method == "bootstrap" else method
+
+
+def inf_cache_field() -> Any:
+    """The per-result InferenceResult cache field (excluded from repr
+    and equality so frozen results stay hashable value objects)."""
+    return dataclasses.field(default_factory=dict, repr=False, compare=False)
+
+
+@runtime_checkable
+class CausalEstimator(Protocol):
+    """Every estimator facade: construct with a CausalConfig, ``fit``
+    returns an EffectResult.  (Positional data arguments differ by
+    family — DML takes (y, t, X), the IV family (y, t, z, X) — which is
+    why the registry carries per-estimator fit adapters.)"""
+
+    cfg: CausalConfig
+
+    def fit(self, *args: Any, **kwargs: Any) -> "EffectResult":
+        ...
+
+
+class EffectResult:
+    """Mixin owning the shared fit -> inference plumbing.
+
+    Subclass dataclasses provide the fields ``cfg`` (CausalConfig or
+    None), ``fit_ctx`` (replay context, None disables replicate
+    inference) and ``_inf_cache`` (via ``inf_cache_field()``), plus the
+    hook ``_replicate_inference`` that runs one batch of replicate
+    re-estimations through the task runtime.
+    """
+
+    estimator_name = "effect"
+
+    # -- config / runtime plumbing --------------------------------------
+    def _config(self) -> CausalConfig:
+        return self.cfg or CausalConfig()
+
+    def _runtime_kwargs(self) -> Dict[str, Any]:
+        """The task-runtime knobs every replicate dispatch threads
+        through (memory-budgeted chunking + the downgrade ladder)."""
+        cfg = self._config()
+        return dict(
+            memory_budget=cfg.runtime_memory_budget,
+            chunk=cfg.runtime_chunk,
+            max_retries=cfg.runtime_max_retries,
+        )
+
+    # -- estimator-specific hooks ---------------------------------------
+    def _resolve_method(self, method: str) -> str:
+        """Map/refuse inference methods the estimator cannot serve
+        (e.g. DR has no fold-state jackknife shortcut)."""
+        return method
+
+    def _replicate_inference(
+        self, method: str, n_boot: int, executor: Any, alpha: float
+    ):
+        raise NotImplementedError
+
+    def _analytic_ate_interval(self, alpha: float) -> Tuple[float, float]:
+        raise ValueError(
+            f"{type(self).__name__} has no analytic ATE interval; set "
+            "cfg.inference or call .inference(method=...) explicitly"
+        )
+
+    def _analytic_cate_interval(
+        self, phi: jax.Array, alpha: float
+    ) -> Tuple[jax.Array, jax.Array]:
+        raise ValueError(
+            f"cate_interval needs replicate inference ({type(self).__name__} "
+            "has no coefficient covariance); set cfg.inference or call "
+            ".inference(method=...) explicitly"
+        )
+
+    def _summary_extra(self) -> Tuple[str, ...]:
+        """Diagnostics lines appended to ``summary()``."""
+        return ()
+
+    # -- uncertainty quantification (repro.inference) -------------------
+    def inference(
+        self,
+        *,
+        method: Optional[str] = None,
+        n_bootstrap: Optional[int] = None,
+        executor: Optional[str] = None,
+        alpha: Optional[float] = None,
+    ):
+        """Replicate-based inference, computed lazily and cached.  The B
+        re-estimations run as ONE program through the configured
+        Executor / task runtime; ``method`` overrides cfg.inference
+        (bootstrap | multiplier | jackknife).  The replicates are
+        alpha-independent, so alpha is NOT part of the cache key — a new
+        level re-quantiles the stored draws."""
+        if self.fit_ctx is None:
+            raise ValueError(
+                "result carries no fit context; re-fit through the "
+                "estimator facade to enable replicate inference"
+            )
+        cfg = self._config()
+        method = method or cfg.inference
+        if method in ("none", ""):
+            raise ValueError("cfg.inference='none'; pass method= to force")
+        method = self._resolve_method(method)
+        n_boot = n_bootstrap or cfg.n_bootstrap
+        exe = executor or cfg.inference_executor
+        a = cfg.alpha if alpha is None else alpha
+        cache_key = (method, n_boot, exe)
+        if cache_key in self._inf_cache:
+            return self._inf_cache[cache_key]
+        res = self._replicate_inference(method, n_boot, exe, a)
+        self._inf_cache[cache_key] = res
+        return res
+
+    def ate_interval(
+        self, alpha: Optional[float] = None, kind: str = "percentile"
+    ) -> Tuple[float, float]:
+        """(lo, hi) CI for the ATE functional from cfg.n_bootstrap
+        replicate re-estimations; falls back to the estimator's analytic
+        interval when cfg.inference == 'none'."""
+        cfg = self._config()
+        a = cfg.alpha if alpha is None else alpha
+        if self.fit_ctx is None or cfg.inference in ("none", ""):
+            return self._analytic_ate_interval(a)
+        return self.inference(alpha=a).ate_interval(a, kind)
+
+    # the IV family's name for the same functional
+    late_interval = ate_interval
+
+    def cate_interval(
+        self, X: jax.Array, alpha: Optional[float] = None
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Pointwise (lo, hi) bands for theta(x) = <phi(x), theta>."""
+        cfg = self._config()
+        a = cfg.alpha if alpha is None else alpha
+        phi = cate_basis(X, cfg.cate_features)
+        if self.fit_ctx is None or cfg.inference in ("none", ""):
+            return self._analytic_cate_interval(phi, a)
+        return self.inference(alpha=a).cate_interval(phi, a)
+
+    def summary(self) -> str:
+        raise NotImplementedError
+
+
+class SandwichEffectResult(EffectResult):
+    """theta + HC0 sandwich covariance (subclass dataclasses provide
+    ``theta`` (p_phi,) and ``cov`` (p_phi, p_phi))."""
+
+    @property
+    def ate(self) -> float:
+        """With phi = [1, x...], theta[0] is the effect at x = 0; for
+        the constant basis it IS the ATE (the IV family reads the same
+        coefficient as the LATE).  For heterogeneous bases use
+        ``cate(X).mean()``."""
+        return float(self.theta[0])
+
+    late = ate
+
+    @property
+    def stderr(self) -> jax.Array:
+        return jnp.sqrt(jnp.diag(self.cov))
+
+    def cate(self, X: jax.Array) -> jax.Array:
+        phi = cate_basis(X, self._config().cate_features)
+        return phi @ self.theta
+
+    def ate_of(self, X: jax.Array) -> float:
+        return float(self.cate(X).mean())
+
+    def conf_int(self, alpha: float = 0.05) -> Tuple[jax.Array, jax.Array]:
+        from repro.inference.intervals import z_crit
+
+        se = self.stderr
+        z = z_crit(alpha)
+        return self.theta - z * se, self.theta + z * se
+
+    def _analytic_ate_interval(self, alpha: float) -> Tuple[float, float]:
+        lo, hi = self.conf_int(alpha)
+        return float(lo[0]), float(hi[0])
+
+    def _analytic_cate_interval(
+        self, phi: jax.Array, alpha: float
+    ) -> Tuple[jax.Array, jax.Array]:
+        from repro.inference.intervals import z_crit
+
+        z = z_crit(alpha)
+        se = jnp.sqrt(
+            jnp.clip(jnp.einsum("ni,ij,nj->n", phi, self.cov, phi), 0.0, None)
+        )
+        c = phi @ self.theta
+        return c - z * se, c + z * se
+
+    def summary(self) -> str:
+        lo, hi = self.conf_int()
+        lines = [
+            f"{self.estimator_name} result",
+            "-" * 46,
+            f"{'coef':>4} {'point':>10} {'stderr':>10} {'ci_lo':>9} {'ci_hi':>9}",
+        ]
+        for i in range(self.theta.shape[0]):
+            lines.append(
+                f"θ[{i}] {float(self.theta[i]):>10.4f} "
+                f"{float(self.stderr[i]):>10.4f} "
+                f"{float(lo[i]):>9.4f} {float(hi[i]):>9.4f}"
+            )
+        extra = self._summary_extra()
+        if extra:
+            lines.append("-" * 46)
+            lines.extend(extra)
+        return "\n".join(lines)
+
+
+class PseudoOutcomeEffectResult(EffectResult):
+    """Scalar ATE = mean pseudo-outcome + a theta projection on phi
+    (subclass dataclasses provide ``ate``, ``stderr`` (floats) and
+    ``theta`` (p_phi,))."""
+
+    def cate(self, X: jax.Array, n_features: Optional[int] = None) -> jax.Array:
+        nf = n_features if n_features is not None else self._config().cate_features
+        return cate_basis(X, nf) @ self.theta
+
+    def conf_int(self, alpha: float = 0.05) -> Tuple[float, float]:
+        from repro.inference.intervals import z_crit
+
+        z = z_crit(alpha)
+        return self.ate - z * self.stderr, self.ate + z * self.stderr
+
+    def _analytic_ate_interval(self, alpha: float) -> Tuple[float, float]:
+        return self.conf_int(alpha)
+
+    def summary(self) -> str:
+        lo, hi = self.conf_int()
+        lines = [
+            f"{self.estimator_name} result",
+            "-" * 46,
+            f"ATE = {self.ate:+.4f} (se {self.stderr:.4f}), "
+            f"95% CI [{lo:+.4f}, {hi:+.4f}]",
+        ]
+        extra = self._summary_extra()
+        if extra:
+            lines.extend(extra)
+        return "\n".join(lines)
+
+
+def fit_adapter(
+    estimator_cls: Callable[[CausalConfig], Any], *fields: str
+) -> Callable[..., Any]:
+    """Uniform (data, cfg, key) -> EffectResult adapter the registry and
+    sweep layers use: pulls ``fields`` off the data object and calls
+    ``estimator_cls(cfg).fit(*columns, key=key)``."""
+
+    def fit(data: Any, cfg: CausalConfig, key: jax.Array) -> Any:
+        cols = [getattr(data, f) for f in fields]
+        return estimator_cls(cfg).fit(*cols, key=key)
+
+    return fit

@@ -37,7 +37,7 @@ bitwise per replicate.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +46,9 @@ from repro.config import CausalConfig
 from repro.core import moments
 from repro.core.crossfit import crossfit_one, fold_ids
 from repro.core.estimands import IVDiagnostics, compute_iv_diagnostics
+from repro.core.estimator import (PseudoOutcomeEffectResult,
+                                  SandwichEffectResult, inf_cache_field,
+                                  resolve_scheme)
 from repro.core.final_stage import cate_basis
 from repro.core.nuisance import Nuisance, make_nuisance, make_ridge
 from repro.inference.numerics import det_inv, det_solve
@@ -150,7 +153,7 @@ class IVFitContext:
 
 
 @dataclasses.dataclass(frozen=True)
-class OrthoIVResult:
+class OrthoIVResult(SandwichEffectResult):
     theta: jax.Array             # (p_phi,) final-stage coefficients
     cov: jax.Array               # (p_phi, p_phi)
     cfg: CausalConfig
@@ -158,122 +161,43 @@ class OrthoIVResult:
     final: IVFinalStageResult
     diagnostics: IVDiagnostics
     fit_ctx: Optional[IVFitContext] = None
-    _inf_cache: Dict[Any, Any] = dataclasses.field(
-        default_factory=dict, repr=False, compare=False)
+    _inf_cache: Dict[Any, Any] = inf_cache_field()
 
-    @property
-    def ate(self) -> float:
-        """theta[0]: under the constant basis the (L)ATE; for
-        heterogeneous bases use ``cate(X).mean()``."""
-        return float(self.theta[0])
+    estimator_name = "OrthoIV"
 
-    # the IV estimand under binary-instrument compliance designs
-    late = ate
-
-    @property
-    def stderr(self) -> jax.Array:
-        return jnp.sqrt(jnp.diag(self.cov))
-
-    def cate(self, X: jax.Array) -> jax.Array:
-        phi = cate_basis(X, self.cfg.cate_features)
-        return phi @ self.theta
-
-    def ate_of(self, X: jax.Array) -> float:
-        return float(self.cate(X).mean())
-
-    def conf_int(self, alpha: float = 0.05):
-        from repro.inference.intervals import z_crit
-        se = self.stderr
-        zc = z_crit(alpha)
-        return self.theta - zc * se, self.theta + zc * se
-
-    # -- uncertainty quantification (repro.inference) -------------------
-    def inference(self, *, method: Optional[str] = None,
-                  n_bootstrap: Optional[int] = None,
-                  executor: Optional[str] = None,
-                  alpha: Optional[float] = None):
-        """Replicate inference through the task runtime; same caching
-        contract as DMLResult.inference (alpha is not a cache key)."""
+    def _replicate_inference(self, method, n_boot, exe, alpha):
+        """Replicate inference through the task runtime: delete-fold
+        jackknife off ONE segmented instrumented-Gram pass, or B
+        weighted 2SLS refits as one batched program."""
         from repro.inference import iv_bootstrap
         from repro.inference.jackknife import delete_fold_jackknife_iv
-        if self.fit_ctx is None:
-            raise ValueError("result carries no fit context; re-fit with "
-                             "OrthoIV.fit to enable replicate inference")
-        method = method or self.cfg.inference
-        if method in ("none", ""):
-            raise ValueError("cfg.inference='none'; pass method= to force")
-        n_boot = n_bootstrap or self.cfg.n_bootstrap
-        exe = executor or self.cfg.inference_executor
-        a = self.cfg.alpha if alpha is None else alpha
-        cache_key = (method, n_boot, exe)
-        if cache_key in self._inf_cache:
-            return self._inf_cache[cache_key]
         ctx = self.fit_ctx
-        rt_kw = dict(memory_budget=self.cfg.runtime_memory_budget,
-                     chunk=self.cfg.runtime_chunk,
-                     max_retries=self.cfg.runtime_max_retries)
+        rt_kw = self._runtime_kwargs()
         if method == "jackknife":
             cf = self.crossfit
-            res = delete_fold_jackknife_iv(
+            return delete_fold_jackknife_iv(
                 ctx.y, ctx.t, ctx.z, cf.oof_y, cf.oof_t, cf.oof_z,
-                cf.folds, ctx.phi, self.cfg.n_folds, alpha=a,
+                cf.folds, ctx.phi, self.cfg.n_folds, alpha=alpha,
                 executor=exe, point=self.theta, point_se=self.stderr,
                 rules=ctx.rules, row_block=self.cfg.row_block, **rt_kw)
-        else:
-            scheme = "pairs" if method == "bootstrap" else method
-            res = iv_bootstrap(
-                ctx.nuis_y, ctx.nuis_t, ctx.nuis_z,
-                n_folds=self.cfg.n_folds, XW=ctx.XW, y=ctx.y, t=ctx.t,
-                z=ctx.z, phi=ctx.phi,
-                key=jax.random.fold_in(ctx.key, 0x1b00), alpha=a,
-                n_replicates=n_boot, scheme=scheme, executor=exe,
-                point=self.theta, point_se=self.stderr, rules=ctx.rules,
-                row_block=self.cfg.row_block, **rt_kw)
-        self._inf_cache[cache_key] = res
-        return res
+        return iv_bootstrap(
+            ctx.nuis_y, ctx.nuis_t, ctx.nuis_z,
+            n_folds=self.cfg.n_folds, XW=ctx.XW, y=ctx.y, t=ctx.t,
+            z=ctx.z, phi=ctx.phi,
+            key=jax.random.fold_in(ctx.key, 0x1b00), alpha=alpha,
+            n_replicates=n_boot, scheme=resolve_scheme(method),
+            executor=exe, point=self.theta, point_se=self.stderr,
+            rules=ctx.rules, row_block=self.cfg.row_block, **rt_kw)
 
-    def ate_interval(self, alpha: Optional[float] = None,
-                     kind: str = "percentile") -> Tuple[float, float]:
-        a = self.cfg.alpha if alpha is None else alpha
-        if self.cfg.inference in ("none", "") or self.fit_ctx is None:
-            lo, hi = self.conf_int(a)
-            return float(lo[0]), float(hi[0])
-        return self.inference(alpha=a).ate_interval(a, kind)
-
-    late_interval = ate_interval
-
-    def cate_interval(self, X: jax.Array, alpha: Optional[float] = None
-                      ) -> Tuple[jax.Array, jax.Array]:
-        from repro.inference.intervals import z_crit
-        a = self.cfg.alpha if alpha is None else alpha
-        phi = cate_basis(X, self.cfg.cate_features)
-        if self.cfg.inference in ("none", "") or self.fit_ctx is None:
-            zc = z_crit(a)
-            se = jnp.sqrt(jnp.clip(jnp.einsum(
-                "ni,ij,nj->n", phi, self.cov, phi), 0.0, None))
-            c = phi @ self.theta
-            return c - zc * se, c + zc * se
-        return self.inference(alpha=a).cate_interval(phi, a)
-
-    def summary(self) -> str:
-        lo, hi = self.conf_int()
-        lines = ["OrthoIV result", "-" * 46,
-                 f"{'coef':>4} {'point':>10} {'stderr':>10} "
-                 f"{'ci_lo':>9} {'ci_hi':>9}"]
-        for i in range(self.theta.shape[0]):
-            lines.append(f"θ[{i}] {float(self.theta[i]):>10.4f} "
-                         f"{float(self.stderr[i]):>10.4f} "
-                         f"{float(lo[i]):>9.4f} {float(hi[i]):>9.4f}")
+    def _summary_extra(self):
         d = self.diagnostics
         flag = "WEAK" if d.weak_instrument else "ok"
-        lines += ["-" * 46,
-                  f"IV-moment |E[e·rz]| = {d.ortho_moment:.2e}",
-                  f"first-stage F = {d.first_stage_f:.1f} [{flag}]",
-                  f"corr(rz, rt) = {d.instrument_corr:+.3f}",
-                  f"instrument overlap: E[Z|X] in "
-                  f"[{d.min_instrument_propensity:.3f}, "
-                  f"{d.max_instrument_propensity:.3f}]"]
-        return "\n".join(lines)
+        return (f"IV-moment |E[e·rz]| = {d.ortho_moment:.2e}",
+                f"first-stage F = {d.first_stage_f:.1f} [{flag}]",
+                f"corr(rz, rt) = {d.instrument_corr:+.3f}",
+                f"instrument overlap: E[Z|X] in "
+                f"[{d.min_instrument_propensity:.3f}, "
+                f"{d.max_instrument_propensity:.3f}]")
 
 
 class OrthoIV:
@@ -340,7 +264,7 @@ def clip_compliance(beta: jax.Array, clip: float) -> jax.Array:
 
 
 @dataclasses.dataclass(frozen=True)
-class DRIVResult:
+class DRIVResult(PseudoOutcomeEffectResult):
     ate: float                # mean pseudo-outcome: the LATE functional
     stderr: float
     theta: jax.Array          # CATE coefficients on phi(x)
@@ -349,35 +273,13 @@ class DRIVResult:
     diagnostics: IVDiagnostics
     cfg: Optional[CausalConfig] = None
     fit_ctx: Optional[IVFitContext] = None
-    _inf_cache: Dict[Any, Any] = dataclasses.field(
-        default_factory=dict, repr=False, compare=False)
+    _inf_cache: Dict[Any, Any] = inf_cache_field()
+
+    estimator_name = "DRIV"
 
     late = property(lambda self: self.ate)
 
-    def cate(self, X: jax.Array, n_features: Optional[int] = None
-             ) -> jax.Array:
-        nf = n_features if n_features is not None else (
-            self.cfg.cate_features if self.cfg else 1)
-        return cate_basis(X, nf) @ self.theta
-
-    def conf_int(self, z: float = 1.96):
-        return self.ate - z * self.stderr, self.ate + z * self.stderr
-
-    def inference(self, *, n_bootstrap: Optional[int] = None,
-                  executor: Optional[str] = None,
-                  alpha: Optional[float] = None,
-                  method: Optional[str] = None):
-        """Bootstrap the whole DRIV pipeline (nuisances, compliance,
-        preliminary estimate, pseudo-outcome regression) as one
-        runtime-scheduled program; cached like DR/DML."""
-        from repro.inference import driv_bootstrap
-        if self.fit_ctx is None:
-            raise ValueError("result carries no fit context; re-fit with "
-                             "DRIV.fit to enable replicate inference")
-        cfg = self.cfg or CausalConfig()
-        method = method or cfg.inference
-        if method in ("none", ""):
-            raise ValueError("cfg.inference='none'; pass method= to force")
+    def _resolve_method(self, method):
         if method == "jackknife":
             # unlike OrthoIV, the DRIV pipeline has no LOO-identity
             # shortcut (the pseudo-outcome depends on every fold's
@@ -387,51 +289,25 @@ class DRIVResult:
                 "DRIV has no delete-fold jackknife; use "
                 "method='bootstrap'|'multiplier', or OrthoIV for a "
                 "jackknife over the instrumented moment")
-        scheme = "pairs" if method == "bootstrap" else method
-        n_boot = n_bootstrap or cfg.n_bootstrap
-        exe = executor or cfg.inference_executor
-        a = cfg.alpha if alpha is None else alpha
-        ck = (scheme, n_boot, exe)
-        if ck in self._inf_cache:
-            return self._inf_cache[ck]
+        return method
+
+    def _replicate_inference(self, method, n_boot, exe, alpha):
+        """Bootstrap the whole DRIV pipeline (nuisances, compliance,
+        preliminary estimate, pseudo-outcome regression) as one
+        runtime-scheduled program (the LATE functional's own draws ride
+        along)."""
+        from repro.inference import driv_bootstrap
+        cfg = self._config()
         ctx = self.fit_ctx
-        res = driv_bootstrap(
+        return driv_bootstrap(
             ctx.nuis_y, ctx.nuis_t, ctx.nuis_z, ctx.compliance,
             n_folds=cfg.n_folds, XW=ctx.XW, y=ctx.y, t=ctx.t, z=ctx.z,
             phi=ctx.phi, key=jax.random.fold_in(ctx.key, 0x1b00),
-            alpha=a, n_replicates=n_boot, scheme=scheme, executor=exe,
+            alpha=alpha, n_replicates=n_boot,
+            scheme=resolve_scheme(method), executor=exe,
             cov_clip=cfg.iv_cov_clip, point=self.theta,
             ate_point=self.ate, rules=ctx.rules,
-            row_block=cfg.row_block,
-            memory_budget=cfg.runtime_memory_budget,
-            chunk=cfg.runtime_chunk,
-            max_retries=cfg.runtime_max_retries)
-        self._inf_cache[ck] = res
-        return res
-
-    def ate_interval(self, alpha: Optional[float] = None,
-                     kind: str = "percentile") -> Tuple[float, float]:
-        from repro.inference.intervals import z_crit
-        cfg = self.cfg or CausalConfig()
-        a = cfg.alpha if alpha is None else alpha
-        if self.fit_ctx is None or cfg.inference in ("none", ""):
-            zc = z_crit(a)
-            return self.ate - zc * self.stderr, self.ate + zc * self.stderr
-        return self.inference(alpha=a).ate_interval(a, kind)
-
-    late_interval = ate_interval
-
-    def cate_interval(self, X: jax.Array, alpha: Optional[float] = None
-                      ) -> Tuple[jax.Array, jax.Array]:
-        cfg = self.cfg or CausalConfig()
-        if self.fit_ctx is None or cfg.inference in ("none", ""):
-            raise ValueError(
-                "cate_interval needs replicate inference (DRIVResult has "
-                "no coefficient covariance); set cfg.inference or call "
-                ".inference(method=...) explicitly")
-        a = cfg.alpha if alpha is None else alpha
-        phi = cate_basis(X, cfg.cate_features)
-        return self.inference(alpha=a).cate_interval(phi, a)
+            row_block=cfg.row_block, **self._runtime_kwargs())
 
 
 class DRIV:

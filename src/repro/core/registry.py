@@ -1,0 +1,455 @@
+"""The estimator registry: ONE source of truth for every estimator in
+the catalogue (DML, DRLearner, the S/T/X metalearners, OrthoIV, DRIV).
+
+Each estimator registers an ``EstimatorSpec``; three consumers read the
+registry instead of keeping private copies:
+
+  * tests/test_conformance.py runs the cross-estimator certification
+    suite (serial ≡ vmap bootstrap bit-identity at canonical shapes,
+    chunked ≡ whole exact equality, row_block invariance, config
+    round-trip, truth recovery) over SPECS;
+  * repro.sweep builds its segment-parallel cells from
+    ``spec.weighted_fit`` (a pure masked/weighted single fit — the same
+    closure family the bootstrap replicates run, so a segment mask is
+    just another weight vector) and, where available,
+    ``spec.residual_fit``/``spec.final_fit`` for shared-nuisance reuse
+    across cells that differ only in final stage;
+  * benchmarks (bench_sweep) loop the same cells serially as the
+    baseline the batched panel is compared against.
+
+This module used to live in tests/conformance.py; it was promoted so
+src code can consume it.  Adding an estimator = appending one spec; the
+whole certification suite and the sweep subsystem apply automatically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import CausalConfig
+from repro.core.dml import DML
+from repro.core.drlearner import DRLearner
+from repro.core.estimator import fit_adapter
+from repro.core.iv import DRIV, OrthoIV
+from repro.core.metalearners import (make_meta_core, s_learner, t_learner,
+                                     x_learner)
+from repro.core.nuisance import make_logistic, make_nuisance, make_ridge
+from repro.data.causal_dgp import make_causal_data, make_iv_data
+
+# Non-divisible on purpose: n % ROW_BLOCK != 0, so the zero-row padding
+# of the blocked decomposition is exercised by every chunked≡whole
+# assertion.
+N_CONF = 1100
+ROW_BLOCK = 256
+EFFECT = 1.2
+
+
+@dataclasses.dataclass(frozen=True)
+class EstimatorSpec:
+    """One estimator's registration with the conformance suite AND the
+    sweep subsystem.
+
+    fit(data, cfg, key)   -> pytree of jnp arrays (the full estimate)
+    point(tree)           -> float ATE/LATE read off that pytree
+    boot(data, cfg, key, executor, B) -> InferenceResult
+    boot_cfg              the canonical bit-identity config for the
+                          serial ≡ vmap check (None -> skip)
+    rb_tol                |theta(rb=0) - theta(rb=R)| tolerance for the
+                          cross-setting invariance check
+    weighted_fit(cfg)     -> cell(key, w, data) -> {"theta", "ate", ...}
+                          the pure weighted single fit the sweep masks
+                          per segment (w = segment mask — the same
+                          closure family bootstrap replicates run, so
+                          every certified bit-identity contract
+                          transfers to sweep cells)
+    residual_fit(cfg)     -> resid(key, w, data) -> residual pytree —
+                          the nuisance prefix of weighted_fit, shared
+                          across sweep cells that differ only in final
+                          stage (None -> no reuse path)
+    final_fit(cfg)        -> final(resid, w, data) -> {"theta", ...} —
+                          the final-stage suffix consuming residual_fit
+    needs_instrument      whether ``data`` must carry a ``z`` column
+    """
+
+    name: str
+    make_data: Callable[[jax.Array], Any]
+    fit: Callable[[Any, CausalConfig, jax.Array], Any]
+    point: Callable[[Any], float]
+    truth: Callable[[Any], float]
+    base_cfg: CausalConfig
+    boot: Optional[Callable[..., Any]] = None
+    boot_cfg: Optional[CausalConfig] = None
+    truth_tol: float = 0.25
+    rb_tol: float = 2e-3
+    weighted_fit: Optional[Callable[[CausalConfig], Callable]] = None
+    residual_fit: Optional[Callable[[CausalConfig], Callable]] = None
+    final_fit: Optional[Callable[[CausalConfig], Callable]] = None
+    needs_instrument: bool = False
+
+
+def _conf_data(key):
+    return make_causal_data(key, N_CONF, 6, effect=EFFECT)
+
+
+def _conf_iv_data(key):
+    return make_iv_data(key, N_CONF, 6, effect=EFFECT, compliance=0.75)
+
+
+def _boot_via_inference(fit):
+    """Estimators whose result exposes .inference(): one adapter."""
+
+    def boot(data, cfg, key, executor, n_replicates):
+        res = fit(data, cfg, key)
+        return res.inference(executor=executor,
+                             n_bootstrap=n_replicates)
+
+    return boot
+
+
+def nuisance_signature(cfg: CausalConfig) -> tuple:
+    """The config fields that determine the nuisance stage — sweep cells
+    whose configs agree on this tuple (differing only in final-stage
+    fields like cate_features) can share one residual pass."""
+    return (cfg.n_folds, cfg.nuisance_y, cfg.nuisance_t, cfg.nuisance_z,
+            cfg.discrete_treatment, cfg.discrete_instrument,
+            cfg.ridge_lambda, cfg.newton_iters, cfg.row_block,
+            cfg.row_block_strategy, cfg.mlp_hidden, cfg.mlp_steps,
+            cfg.mlp_lr, cfg.iv_cov_clip)
+
+
+# -- DML --------------------------------------------------------------------
+
+_fit_dml = fit_adapter(DML, "y", "t", "X")
+
+
+def _dml_nuisances(cfg):
+    t_task = "clf" if cfg.discrete_treatment else "reg"
+    return (make_nuisance(cfg.nuisance_y, "reg", cfg),
+            make_nuisance(cfg.nuisance_t, t_task, cfg))
+
+
+def _dml_weighted_fit(cfg):
+    from repro.inference.bootstrap import dml_theta_once
+    ny, nt = _dml_nuisances(cfg)
+
+    def cell(key, w, data):
+        out = dml_theta_once(ny, nt, cfg.n_folds, data["X"], data["y"],
+                             data["t"], data["phi"], key, w,
+                             with_se=True, row_block=cfg.row_block)
+        out["ate"] = out["theta"][0]
+        return out
+
+    return cell
+
+
+def _dml_residual_fit(cfg):
+    from repro.inference.bootstrap import dml_residuals_once
+    ny, nt = _dml_nuisances(cfg)
+
+    def resid(key, w, data):
+        return dml_residuals_once(ny, nt, cfg.n_folds, data["X"],
+                                  data["y"], data["t"], key, w,
+                                  row_block=cfg.row_block)
+
+    return resid
+
+
+def _dml_final_fit(cfg):
+    from repro.inference.numerics import weighted_theta
+
+    def final(resid, w, data):
+        theta, se = weighted_theta(resid["ry"], resid["rt"], data["phi"],
+                                   w, with_se=True,
+                                   row_block=cfg.row_block)
+        return {"theta": theta, "se": se, "ate": theta[0]}
+
+    return final
+
+
+# -- DRLearner --------------------------------------------------------------
+
+_fit_dr = fit_adapter(DRLearner, "y", "t", "X")
+
+
+def _dr_weighted_fit(cfg):
+    from repro.inference.bootstrap import dr_theta_once
+    outcome = make_ridge(cfg.ridge_lambda, row_block=cfg.row_block,
+                         strategy=cfg.row_block_strategy)
+    propensity = make_logistic(cfg.ridge_lambda, cfg.newton_iters,
+                               row_block=cfg.row_block,
+                               strategy=cfg.row_block_strategy)
+
+    def cell(key, w, data):
+        return dr_theta_once(outcome, propensity, cfg.n_folds, data["X"],
+                             data["y"], data["t"], data["phi"], key, w,
+                             with_se=True, row_block=cfg.row_block)
+
+    return cell
+
+
+# -- metalearners (weighted cores from repro.core.metalearners; the
+#    cfg threads row_block/strategy through the nuisance hypers) ------------
+
+def _fit_meta(learner_fn):
+    def fit(data, cfg, key):
+        return learner_fn(data.y, data.t, data.X, key=key, cfg=cfg)
+
+    return fit
+
+
+def _meta_weighted_fit(learner: str):
+    def build(cfg):
+        core = make_meta_core(learner, cfg)
+
+        def cell(key, w, data):
+            ate, _ = core(key, data["y"], data["t"], data["X"], w)
+            return {"theta": ate[None], "ate": ate}
+
+        return cell
+
+    return build
+
+
+# -- orthogonal-IV family ---------------------------------------------------
+
+_fit_orthoiv = fit_adapter(OrthoIV, "y", "t", "z", "X")
+
+_fit_driv = fit_adapter(DRIV, "y", "t", "z", "X")
+
+
+def _iv_nuisances(cfg):
+    est = OrthoIV(cfg)
+    return est.nuis_y, est.nuis_t, est.nuis_z
+
+
+def _orthoiv_weighted_fit(cfg):
+    from repro.inference.bootstrap import iv_theta_once
+    ny, nt, nz = _iv_nuisances(cfg)
+
+    def cell(key, w, data):
+        out = iv_theta_once(ny, nt, nz, cfg.n_folds, data["X"],
+                            data["y"], data["t"], data["z"],
+                            data["phi"], key, w, with_se=True,
+                            row_block=cfg.row_block)
+        out["ate"] = out["theta"][0]
+        return out
+
+    return cell
+
+
+def _orthoiv_residual_fit(cfg):
+    from repro.inference.bootstrap import iv_residuals_once
+    ny, nt, nz = _iv_nuisances(cfg)
+
+    def resid(key, w, data):
+        return iv_residuals_once(ny, nt, nz, cfg.n_folds, data["X"],
+                                 data["y"], data["t"], data["z"], key,
+                                 w, row_block=cfg.row_block)
+
+    return resid
+
+
+def _orthoiv_final_fit(cfg):
+    from repro.inference.numerics import weighted_iv_theta
+
+    def final(resid, w, data):
+        theta, se = weighted_iv_theta(resid["ry"], resid["rt"],
+                                      resid["rz"], data["phi"], w,
+                                      with_se=True,
+                                      row_block=cfg.row_block)
+        return {"theta": theta, "se": se, "ate": theta[0]}
+
+    return final
+
+
+def _driv_weighted_fit(cfg):
+    from repro.inference.bootstrap import driv_theta_once
+    ny, nt, nz = _iv_nuisances(cfg)
+    compliance = make_ridge(cfg.ridge_lambda, row_block=cfg.row_block,
+                            strategy=cfg.row_block_strategy)
+
+    def cell(key, w, data):
+        return driv_theta_once(ny, nt, nz, compliance, cfg.n_folds,
+                               data["X"], data["y"], data["t"],
+                               data["z"], data["phi"], key, w,
+                               cov_clip=cfg.iv_cov_clip, with_se=True,
+                               row_block=cfg.row_block)
+
+    return cell
+
+
+_CFG = CausalConfig(n_folds=3, inference="none")
+_CFG_BOOT_RB = CausalConfig(n_folds=3, n_bootstrap=4,
+                            row_block=ROW_BLOCK)
+
+SPECS = (
+    EstimatorSpec(
+        name="dml",
+        make_data=_conf_data,
+        fit=_fit_dml,
+        point=lambda r: r.ate,
+        truth=lambda d: d.true_ate,
+        base_cfg=_CFG,
+        boot=_boot_via_inference(_fit_dml),
+        # the uniform conformance contract certifies the row-blocked
+        # path (its lax.scan is a fusion barrier, so the invariant
+        # einsum vocabulary survives batching at any shape); the
+        # legacy whole-array p_phi=1 contract stays pinned at its
+        # PR-1 canonical shape in tests/test_inference.py
+        boot_cfg=_CFG_BOOT_RB,
+        weighted_fit=_dml_weighted_fit,
+        residual_fit=_dml_residual_fit,
+        final_fit=_dml_final_fit,
+    ),
+    EstimatorSpec(
+        name="dml_p2_rb",
+        make_data=_conf_data,
+        fit=_fit_dml,
+        point=lambda r: r.ate,
+        truth=lambda d: d.true_ate,
+        base_cfg=dataclasses.replace(_CFG, cate_features=2),
+        boot=_boot_via_inference(_fit_dml),
+        # wider bases hold bit-identity on the row-blocked path only
+        boot_cfg=dataclasses.replace(_CFG_BOOT_RB, cate_features=2),
+        truth_tol=0.4,   # theta[0] is the x=0 effect under this basis
+        weighted_fit=_dml_weighted_fit,
+        residual_fit=_dml_residual_fit,
+        final_fit=_dml_final_fit,
+    ),
+    EstimatorSpec(
+        name="dml_loo",
+        make_data=_conf_data,
+        fit=_fit_dml,
+        point=lambda r: r.ate,
+        truth=lambda d: d.true_ate,
+        base_cfg=dataclasses.replace(_CFG, engine="parallel_loo"),
+        weighted_fit=_dml_weighted_fit,
+        residual_fit=_dml_residual_fit,
+        final_fit=_dml_final_fit,
+    ),
+    EstimatorSpec(
+        name="drlearner",
+        make_data=_conf_data,
+        fit=_fit_dr,
+        point=lambda r: r.ate,
+        truth=lambda d: d.true_ate,
+        base_cfg=_CFG,
+        boot=_boot_via_inference(_fit_dr),
+        boot_cfg=_CFG_BOOT_RB,
+        weighted_fit=_dr_weighted_fit,
+    ),
+    EstimatorSpec(
+        name="s_learner",
+        make_data=_conf_data,
+        fit=_fit_meta(s_learner),
+        point=lambda r: r.ate,
+        truth=lambda d: d.true_ate,
+        base_cfg=_CFG,
+        boot=_boot_via_inference(_fit_meta(s_learner)),
+        boot_cfg=_CFG_BOOT_RB,
+        weighted_fit=_meta_weighted_fit("s"),
+    ),
+    EstimatorSpec(
+        name="t_learner",
+        make_data=_conf_data,
+        fit=_fit_meta(t_learner),
+        point=lambda r: r.ate,
+        truth=lambda d: d.true_ate,
+        base_cfg=_CFG,
+        boot=_boot_via_inference(_fit_meta(t_learner)),
+        boot_cfg=_CFG_BOOT_RB,
+        weighted_fit=_meta_weighted_fit("t"),
+    ),
+    EstimatorSpec(
+        name="x_learner",
+        make_data=_conf_data,
+        fit=_fit_meta(x_learner),
+        point=lambda r: r.ate,
+        truth=lambda d: d.true_ate,
+        base_cfg=_CFG,
+        boot=_boot_via_inference(_fit_meta(x_learner)),
+        boot_cfg=_CFG_BOOT_RB,
+        weighted_fit=_meta_weighted_fit("x"),
+    ),
+    EstimatorSpec(
+        name="orthoiv",
+        make_data=_conf_iv_data,
+        fit=_fit_orthoiv,
+        point=lambda r: r.late,
+        truth=lambda d: d.true_late,
+        base_cfg=_CFG,
+        boot=_boot_via_inference(_fit_orthoiv),
+        boot_cfg=_CFG_BOOT_RB,
+        truth_tol=0.35,  # IV variance at n=1100 is honest-to-goodness wide
+        weighted_fit=_orthoiv_weighted_fit,
+        residual_fit=_orthoiv_residual_fit,
+        final_fit=_orthoiv_final_fit,
+        needs_instrument=True,
+    ),
+    EstimatorSpec(
+        name="orthoiv_p2_rb",
+        make_data=_conf_iv_data,
+        fit=_fit_orthoiv,
+        point=lambda r: r.late,
+        truth=lambda d: d.true_late,
+        base_cfg=dataclasses.replace(_CFG, cate_features=2),
+        boot=_boot_via_inference(_fit_orthoiv),
+        boot_cfg=dataclasses.replace(_CFG_BOOT_RB, cate_features=2),
+        truth_tol=0.5,
+        weighted_fit=_orthoiv_weighted_fit,
+        residual_fit=_orthoiv_residual_fit,
+        final_fit=_orthoiv_final_fit,
+        needs_instrument=True,
+    ),
+    EstimatorSpec(
+        name="driv",
+        make_data=_conf_iv_data,
+        fit=_fit_driv,
+        point=lambda r: r.late,
+        truth=lambda d: d.true_late,
+        base_cfg=_CFG,
+        boot=_boot_via_inference(_fit_driv),
+        boot_cfg=_CFG_BOOT_RB,
+        truth_tol=0.35,
+        weighted_fit=_driv_weighted_fit,
+        needs_instrument=True,
+    ),
+)
+
+SPEC_IDS = tuple(s.name for s in SPECS)
+
+REGISTRY: Dict[str, EstimatorSpec] = {s.name: s for s in SPECS}
+
+
+def get_spec(name: str) -> EstimatorSpec:
+    """Registry lookup by estimator name (the sweep subsystem's entry
+    point)."""
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown estimator {name!r}; registered: {sorted(REGISTRY)}"
+        ) from None
+
+
+def _to_tree(obj):
+    """Recursively open dataclass results into plain dicts (skipping
+    caches, configs and fit contexts) so tree_leaves reaches every
+    nested array — results are NOT registered pytrees."""
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return {f.name: _to_tree(getattr(obj, f.name))
+                for f in dataclasses.fields(obj)
+                if not f.name.startswith("_")
+                and f.name not in ("cfg", "fit_ctx")}
+    return obj
+
+
+def tree_arrays(tree) -> tuple:
+    """The floating jnp-array leaves of an estimator result, for
+    exact-equality comparison across execution strategies."""
+    return tuple(leaf for leaf in jax.tree_util.tree_leaves(_to_tree(tree))
+                 if isinstance(leaf, (jax.Array, jnp.ndarray))
+                 and jnp.issubdtype(leaf.dtype, jnp.floating))

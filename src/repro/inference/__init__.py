@@ -13,7 +13,8 @@ from repro.inference.executor import (Executor, SerialExecutor,  # noqa: F401
 from repro.inference.intervals import (InferenceResult,  # noqa: F401
     percentile_interval, normal_interval, studentized_interval, z_crit)
 from repro.inference.bootstrap import (bootstrap_weights,  # noqa: F401
-    dml_theta_once, dml_bootstrap, dr_bootstrap, iv_theta_once,
-    iv_bootstrap, driv_theta_once, driv_bootstrap)
+    dml_theta_once, dml_residuals_once, dml_bootstrap, dr_bootstrap,
+    dr_theta_once, iv_theta_once, iv_residuals_once, iv_bootstrap,
+    driv_theta_once, driv_bootstrap)
 from repro.inference.jackknife import (delete_fold_jackknife,  # noqa: F401
     delete_fold_jackknife_iv)

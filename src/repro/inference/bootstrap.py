@@ -93,6 +93,26 @@ def fit_predict_folds(nuis: Nuisance, key: jax.Array, X: jax.Array,
     return jax.vmap(nuis.predict, in_axes=(0, None))(st, X)
 
 
+def dml_residuals_once(nuis_y: Nuisance, nuis_t: Nuisance, n_folds: int,
+                       XW: jax.Array, y: jax.Array, t: jax.Array,
+                       key: jax.Array, w: jax.Array, *,
+                       row_block: int = 0) -> Dict[str, jax.Array]:
+    """The nuisance prefix of one weighted DML re-estimation: folds
+    re-derived from ``key``, both nuisances cross-fit under
+    ``fold_weights * w``, returning the orthogonal residuals
+    {ry, rt}.  Split out so sweep cells that differ only in final
+    stage can share one nuisance pass (repro.sweep)."""
+    kf, ky, kt = jax.random.split(key, 3)
+    folds = fold_ids(kf, XW.shape[0], n_folds)
+    Wk = fold_weights(folds, n_folds) * w[None, :]
+    oof_y = _oof_select(fit_predict_folds(nuis_y, ky, XW, y, Wk,
+                                          row_block), folds)
+    oof_t = _oof_select(fit_predict_folds(nuis_t, kt, XW, t, Wk,
+                                          row_block), folds)
+    return {"ry": y.astype(jnp.float32) - oof_y,
+            "rt": t.astype(jnp.float32) - oof_t}
+
+
 def dml_theta_once(nuis_y: Nuisance, nuis_t: Nuisance, n_folds: int,
                    XW: jax.Array, y: jax.Array, t: jax.Array,
                    phi: jax.Array, key: jax.Array, w: jax.Array,
@@ -102,16 +122,9 @@ def dml_theta_once(nuis_y: Nuisance, nuis_t: Nuisance, n_folds: int,
     fold keys re-derived from ``key``, nuisances cross-fit under
     ``fold_weights * w``, weighted orthogonal final stage.  Pure and
     jit/vmap-compatible."""
-    kf, ky, kt = jax.random.split(key, 3)
-    folds = fold_ids(kf, XW.shape[0], n_folds)
-    Wk = fold_weights(folds, n_folds) * w[None, :]
-    oof_y = _oof_select(fit_predict_folds(nuis_y, ky, XW, y, Wk,
-                                          row_block), folds)
-    oof_t = _oof_select(fit_predict_folds(nuis_t, kt, XW, t, Wk,
-                                          row_block), folds)
-    ry = y.astype(jnp.float32) - oof_y
-    rt = t.astype(jnp.float32) - oof_t
-    theta, se = weighted_theta(ry, rt, phi, w, with_se=with_se,
+    r = dml_residuals_once(nuis_y, nuis_t, n_folds, XW, y, t, key, w,
+                           row_block=row_block)
+    theta, se = weighted_theta(r["ry"], r["rt"], phi, w, with_se=with_se,
                                row_block=row_block)
     out = {"theta": theta}
     if se is not None:
@@ -172,6 +185,29 @@ def dml_bootstrap(nuis_y: Nuisance, nuis_t: Nuisance, *, n_folds: int,
         replicate_se=out.get("se"))
 
 
+def iv_residuals_once(nuis_y: Nuisance, nuis_t: Nuisance,
+                      nuis_z: Nuisance, n_folds: int, XW: jax.Array,
+                      y: jax.Array, t: jax.Array, z: jax.Array,
+                      key: jax.Array, w: jax.Array, *,
+                      row_block: int = 0) -> Dict[str, jax.Array]:
+    """The nuisance prefix of one weighted OrthoIV re-estimation: folds
+    re-derived from ``key``, the THREE nuisances cross-fit under
+    ``fold_weights * w``, returning the residual triple {ry, rt, rz}
+    (shared by sweep cells that differ only in final stage)."""
+    kf, ky, kt, kz = jax.random.split(key, 4)
+    folds = fold_ids(kf, XW.shape[0], n_folds)
+    Wk = fold_weights(folds, n_folds) * w[None, :]
+    oof_y = _oof_select(fit_predict_folds(nuis_y, ky, XW, y, Wk,
+                                          row_block), folds)
+    oof_t = _oof_select(fit_predict_folds(nuis_t, kt, XW, t, Wk,
+                                          row_block), folds)
+    oof_z = _oof_select(fit_predict_folds(nuis_z, kz, XW, z, Wk,
+                                          row_block), folds)
+    return {"ry": y.astype(jnp.float32) - oof_y,
+            "rt": t.astype(jnp.float32) - oof_t,
+            "rz": z.astype(jnp.float32) - oof_z}
+
+
 def iv_theta_once(nuis_y: Nuisance, nuis_t: Nuisance, nuis_z: Nuisance,
                   n_folds: int, XW: jax.Array, y: jax.Array,
                   t: jax.Array, z: jax.Array, phi: jax.Array,
@@ -182,20 +218,10 @@ def iv_theta_once(nuis_y: Nuisance, nuis_t: Nuisance, nuis_z: Nuisance,
     under ``fold_weights * w``, weighted instrumented final stage.
     Pure, jit/vmap-compatible, built only from the replicate-invariant
     vocabulary."""
-    kf, ky, kt, kz = jax.random.split(key, 4)
-    folds = fold_ids(kf, XW.shape[0], n_folds)
-    Wk = fold_weights(folds, n_folds) * w[None, :]
-    oof_y = _oof_select(fit_predict_folds(nuis_y, ky, XW, y, Wk,
-                                          row_block), folds)
-    oof_t = _oof_select(fit_predict_folds(nuis_t, kt, XW, t, Wk,
-                                          row_block), folds)
-    oof_z = _oof_select(fit_predict_folds(nuis_z, kz, XW, z, Wk,
-                                          row_block), folds)
-    ry = y.astype(jnp.float32) - oof_y
-    rt = t.astype(jnp.float32) - oof_t
-    rz = z.astype(jnp.float32) - oof_z
-    theta, se = weighted_iv_theta(ry, rt, rz, phi, w, with_se=with_se,
-                                  row_block=row_block)
+    r = iv_residuals_once(nuis_y, nuis_t, nuis_z, n_folds, XW, y, t, z,
+                          key, w, row_block=row_block)
+    theta, se = weighted_iv_theta(r["ry"], r["rt"], r["rz"], phi, w,
+                                  with_se=with_se, row_block=row_block)
     out = {"theta": theta}
     if se is not None:
         out["se"] = se

@@ -1,0 +1,17 @@
+# Segment-parallel sweeps: the paper's many-cohorts workload (estimate
+# E effects × C estimator-configs as batched programs, not a loop).
+#   spec.py       SweepSpec — the (segments × estimator-configs) grid
+#   engine.py     sweep() / serial_loop(): masked weighted cells
+#                 through the task runtime (bitwise ≡ the loop of
+#                 single fits at canonical shapes), shared-nuisance
+#                 reuse, (cell × replicate) CIs via map_product
+#   segmented.py  the one-pass segment×fold-Gram fast path (DML family)
+#   panel.py      EffectPanel — thetas, CIs, diagnostics, per-cell
+#                 failure status
+from repro.sweep.spec import SweepSpec, segment_counts  # noqa: F401
+from repro.sweep.panel import ColumnResult, EffectPanel  # noqa: F401
+from repro.sweep.engine import column_keys, serial_loop, sweep  # noqa: F401
+from repro.sweep.segmented import (  # noqa: F401
+    segmented_dml_sweep,
+    segmented_supported,
+)

@@ -1,0 +1,208 @@
+"""The segmented DML fast path: all E segments' cross-fit estimates
+from ONE segment×fold-segmented pass over the data.
+
+A masked sweep cell re-reads every row per cell — E cells touch E·n
+rows.  But each row belongs to exactly one (segment, fold) pair, so one
+``moments.fold_gram`` pass over the combined id ``segment·K + fold``
+yields every per-(segment, fold) held-out Gram at once, and the
+leave-one-out identity (the repo's ``parallel_loo`` trick, here
+generalized over segments)
+
+    G_complement[s, j] = (Σ_j' Gh[s, j']) - Gh[s, j]
+
+turns them into all E·K fold-complement normal equations with NO
+second data pass.  Ridge nuisances stay EXACT; the logistic treatment
+nuisance uses the Böhning-Lindsay fixed majorizer (H0 = Gram/4 + λI
+factored once per (s, j), then matvec-cheap MM steps — the same
+substitution ``crossfit_parallel_loo`` makes), converging to the same
+optimum as Newton.  The orthogonal final stage and its HC0 meat are
+per-segment one-hot Grams over the residuals.
+
+Everything streams through ``core.moments`` (``fold_gram`` honors
+``cfg.row_block``), so no per-segment data copy and no (E, n) weight
+tensor ever materializes.  This is the "software that estimates many
+effects cheaply" execution (Wong 2020): benchmarks/bench_sweep.py
+measures ~10x over the serial loop at E=64 on CPU.
+
+Contract: a *different execution* of the same estimator, not the same
+bits — like ``engine="parallel_loo"`` vs ``"parallel"``, it shares one
+fold assignment across cells and swaps Newton for MM, so tests assert
+tolerance-equality against gathered per-segment references, while the
+bitwise panel ≡ loop contract stays on the default cells mode.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import CausalConfig
+from repro.core import moments
+from repro.core.crossfit import fold_ids
+from repro.core.final_stage import cate_basis
+from repro.core.registry import EstimatorSpec
+from repro.inference.numerics import det_inv, det_solve
+
+_F32 = jnp.float32
+
+
+def segmented_supported(rspec: EstimatorSpec, cfg: CausalConfig) -> bool:
+    """The one-pass kernels cover the linear-nuisance DML family."""
+    if cfg.discrete_treatment:
+        t_kind_ok = cfg.nuisance_t == "logistic"
+    else:
+        # continuous T is ridge-fit here; a logistic nuisance_t would
+        # silently become a different estimator than cells mode
+        t_kind_ok = cfg.nuisance_t == "ridge"
+    return rspec.name.startswith("dml") and cfg.nuisance_y == "ridge" and t_kind_ok
+
+
+def _aug(X: jax.Array) -> jax.Array:
+    return jnp.concatenate([X, jnp.ones((X.shape[0], 1), X.dtype)], axis=1)
+
+
+def _segment_fold_ridge(X, target, comb, n_segments, k, lam, row_block, strategy):
+    """EXACT per-(segment, fold-complement) ridge via the LOO identity:
+    one fold_gram pass over the combined segment×fold id (the target
+    rides as an appended design column), then E·K tiny solves."""
+    q = X.shape[1] + 1
+    Gh, counts = moments.fold_gram(
+        X,
+        comb,
+        n_segments * k,
+        intercept=True,
+        append=target,
+        row_block=row_block,
+        strategy=strategy,
+    )
+    Gh = Gh.reshape(n_segments, k, q + 1, q + 1)
+    counts = counts.reshape(n_segments, k)
+    Gseg = Gh.sum(axis=1)
+    A_aug = Gseg[:, None] - Gh  # complement Grams
+    n_eff = jnp.maximum(counts.sum(1, keepdims=True) - counts, 1.0)
+    A = A_aug[..., :q, :q] / n_eff[..., None, None] + lam * jnp.eye(q, dtype=_F32)
+    b = A_aug[..., :q, q] / n_eff[..., None]
+    beta = jax.vmap(jax.vmap(det_solve))(A, b)  # (E, k, q)
+    return beta, n_eff
+
+
+def _segment_fold_logistic(
+    Xa, tt, sids, folds, comb, n_segments, k, lam, iters, row_block, strategy
+):
+    """Per-(segment, fold-complement) logistic via the Böhning-Lindsay
+    fixed majorizer: H0 factored from one segmented Gram pass, then
+    ``iters`` MM steps of segment-gathered matvecs (each step reads the
+    data once — no per-cell Gram rebuilds)."""
+    q = Xa.shape[1]
+    GhX, counts = moments.fold_gram(
+        Xa, comb, n_segments * k, row_block=row_block, strategy=strategy
+    )
+    GhX = GhX.reshape(n_segments, k, q, q)
+    counts = counts.reshape(n_segments, k)
+    GsegX = GhX.sum(axis=1)
+    n_eff = jnp.maximum(counts.sum(1, keepdims=True) - counts, 1.0)
+    H0 = (GsegX[:, None] - GhX) / (4.0 * n_eff[..., None, None]) + lam * jnp.eye(
+        q, dtype=_F32
+    )
+    oh_seg = jax.nn.one_hot(sids, n_segments, dtype=_F32)  # (n, E)
+    oh_comb = jax.nn.one_hot(comb, n_segments * k, dtype=_F32)  # (n, E·k)
+
+    def step(_, beta):  # beta: (E, k, q)
+        bs = beta[sids]  # (n, k, q)
+        mu = jax.nn.sigmoid(jnp.einsum("np,nkp->nk", Xa, bs))
+        r = mu - tt[:, None]  # (n, k)
+        # held-in sums per segment minus own-fold sums = complement
+        t1 = jnp.einsum("ns,nk,np->skp", oh_seg, r, Xa)
+        rr = jnp.take_along_axis(r, folds[:, None], axis=1)[:, 0]
+        t2 = jnp.einsum("nc,n,np->cp", oh_comb, rr, Xa).reshape(n_segments, k, q)
+        g = (t1 - t2) / n_eff[..., None] + lam * beta
+        return beta - jax.vmap(jax.vmap(det_solve))(H0, g)
+
+    return jax.lax.fori_loop(0, iters, step, jnp.zeros((n_segments, k, q), _F32))
+
+
+def _segment_final_stage(ry, rt, phi, sids, n_segments, ridge=1e-8):
+    """Per-segment orthogonal final stage + HC0 sandwich, all E
+    segments from one-hot Grams over the residuals (one data pass)."""
+    pf = phi.shape[1]
+    z = rt[:, None] * phi
+    m = jnp.concatenate([z, ry[:, None]], axis=1)
+    oh_seg = jax.nn.one_hot(sids, n_segments, dtype=_F32)
+    gaug = jnp.einsum("ns,ni,nj->sij", oh_seg, m, m)  # (E, pf+1, pf+1)
+    nseg = jnp.maximum(oh_seg.sum(0), 1.0)
+    a = gaug[:, :pf, :pf] + ridge * nseg[:, None, None] * jnp.eye(pf, dtype=_F32)
+    theta = jax.vmap(det_solve)(a, gaug[:, :pf, pf])
+    e = ry - (z * theta[sids]).sum(axis=1)
+    me = e[:, None] * z
+    meat = jnp.einsum("ns,ni,nj->sij", oh_seg, me, me)
+    ainv = jax.vmap(det_inv)(a)
+    cov = jnp.einsum("sia,sab,sbj->sij", ainv, meat, ainv)
+    se = jnp.sqrt(jnp.clip(jnp.diagonal(cov, axis1=1, axis2=2), 0.0, None))
+    return theta, se
+
+
+def segmented_dml_sweep(
+    cfg: CausalConfig,
+    X: jax.Array,
+    y: jax.Array,
+    t: jax.Array,
+    sids: jax.Array,
+    n_segments: int,
+    key: jax.Array,
+) -> Dict[str, jax.Array]:
+    """All E per-segment DML fits from one segmented pass: shared fold
+    assignment, LOO-identity ridge + MM logistic nuisances, per-segment
+    final stage.  Returns {"theta" (E, p), "se" (E, p), "ate" (E,)}."""
+    n = X.shape[0]
+    k = cfg.n_folds
+    lam = cfg.ridge_lambda
+    rb, st = cfg.row_block, cfg.row_block_strategy
+    folds = fold_ids(key, n, k)
+    comb = sids * k + folds  # (n,) in [0, E·k)
+
+    beta_y, _ = _segment_fold_ridge(X, y, comb, n_segments, k, lam, rb, st)
+    xa = _aug(X.astype(_F32))
+    tt = t.astype(_F32)
+    mm_iters = 2 * cfg.newton_iters  # MM trades per-step cost for steps
+    if cfg.discrete_treatment:
+        beta_t = _segment_fold_logistic(
+            xa, tt, sids, folds, comb, n_segments, k, lam, mm_iters, rb, st
+        )
+        mt = jax.nn.sigmoid(jnp.einsum("np,np->n", xa, beta_t[sids, folds]))
+    else:
+        beta_t, _ = _segment_fold_ridge(X, t, comb, n_segments, k, lam, rb, st)
+        mt = jnp.einsum("np,np->n", xa, beta_t[sids, folds])
+
+    # out-of-fold predictions: each row read once by its own
+    # (segment, fold) model — a gather, not an (E, n) prediction matrix
+    my = jnp.einsum("np,np->n", xa, beta_y[sids, folds])
+    ry = y.astype(_F32) - my
+    rt = tt - mt
+    phi = cate_basis(X, cfg.cate_features)
+    theta, se = _segment_final_stage(ry, rt, phi, sids, n_segments)
+    return {"theta": theta, "se": se, "ate": theta[:, 0]}
+
+
+_JITTED: Dict[Any, Any] = {}
+
+
+def segmented_column(
+    cfg: CausalConfig,
+    base_data: Dict[str, Any],
+    n_segments: int,
+    key: jax.Array,
+) -> Dict[str, jax.Array]:
+    """Engine adapter: jit the segmented sweep per (config, E) so
+    repeated sweeps hit the compile cache."""
+    ck = (cfg, n_segments)
+    fn = _JITTED.get(ck)
+    if fn is None:
+        fn = jax.jit(
+            lambda X, y, t, sids, key_: segmented_dml_sweep(
+                cfg, X, y, t, sids, n_segments, key_
+            )
+        )
+        _JITTED[ck] = fn
+    return fn(base_data["X"], base_data["y"], base_data["t"], base_data["sids"], key)

@@ -1,6 +1,7 @@
 """The cross-estimator conformance suite: ONE parametrized
-certification run over every estimator in tests/conformance.py's
-registry (DML, DRLearner, S/T/X metalearners, OrthoIV, DRIV).
+certification run over every estimator in the promoted registry
+(repro.core.registry: DML, DRLearner, S/T/X metalearners, OrthoIV,
+DRIV).
 
 Checks per estimator: serial ≡ vmap bootstrap bit-identity at the
 estimator's canonical shape, chunked ≡ whole blocked-evaluation
@@ -16,8 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conformance import ROW_BLOCK, SPEC_IDS, SPECS, tree_arrays
 from repro.config import CausalConfig
+from repro.core.registry import ROW_BLOCK, SPEC_IDS, SPECS, tree_arrays
 
 _FIT_KEY = jax.random.PRNGKey(0)
 _DATA_KEY = jax.random.PRNGKey(42)
@@ -95,10 +96,14 @@ def test_serial_vmap_bit_identity(spec):
 @pytest.mark.parametrize("spec", SPECS, ids=SPEC_IDS)
 def test_config_round_trip(spec):
     """asdict -> CausalConfig(**d) is the identity, and the round-
-    tripped config drives a bit-identical fit."""
-    cfg = spec.base_cfg
+    tripped config drives a bit-identical fit.  The sweep fields
+    (segment_key / sweep_chunk) ride along with non-default values so
+    the round trip covers them."""
+    cfg = dataclasses.replace(spec.base_cfg, segment_key="cohort",
+                              sweep_chunk=8)
     cfg2 = CausalConfig(**dataclasses.asdict(cfg))
     assert cfg2 == cfg
+    assert (cfg2.segment_key, cfg2.sweep_chunk) == ("cohort", 8)
     data = _data(spec)
     _assert_trees_equal(spec.fit(data, cfg, _FIT_KEY),
                         spec.fit(data, cfg2, _FIT_KEY),
@@ -115,6 +120,28 @@ def test_truth_recovery(spec):
     err = abs(spec.point(res) - spec.truth(data))
     assert err < spec.truth_tol, (spec.name, spec.point(res),
                                   spec.truth(data))
+
+
+_META_IDS = ("s_learner", "t_learner", "x_learner")
+
+
+@pytest.mark.parametrize("spec",
+                         [s for s in SPECS if s.name in _META_IDS],
+                         ids=list(_META_IDS))
+def test_metalearner_ate_interval(spec):
+    """Metalearner fits return EffectResult objects (shared engine
+    layer), so they carry replicate ate_intervals like every other
+    estimator — B weighted learner refits as one batched program."""
+    data = _data(spec)
+    cfg = dataclasses.replace(spec.base_cfg, inference="bootstrap",
+                              n_bootstrap=8)
+    res = spec.fit(data, cfg, _FIT_KEY)
+    lo, hi = res.ate_interval()
+    assert np.isfinite(lo) and np.isfinite(hi) and lo < hi
+    assert lo - 0.3 < spec.truth(data) < hi + 0.3, spec.name
+    # the metalearner CATE is not phi-linear: bands must refuse loudly
+    with pytest.raises(ValueError):
+        res.cate_interval(data.X)
 
 
 # ---------------------------------------------------------------------------
