@@ -56,7 +56,7 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="reduced fixed-size subset for the CI "
                          "bench-gate: crossfit/inference/final_stage/"
-                         "runtime only, minutes not tens of minutes")
+                         "runtime/obs only, minutes not tens of minutes")
     ap.add_argument("--json", default="BENCH_results.json",
                     help="output path for the standardized bench JSON "
                          "('' disables)")
@@ -123,6 +123,13 @@ def main(argv=None):
     else:
         bench_sweep.run(csv=rec)
 
+    print("# --- observability: traced smoke run + cost audit ---")
+    from benchmarks import bench_obs
+    if args.smoke:
+        obs_payload = bench_obs.run(B=32, csv=rec)
+    else:
+        obs_payload = bench_obs.run(csv=rec)
+
     if not args.smoke:
         print("# --- kernel micro-benchmarks ---")
         from benchmarks import bench_kernels
@@ -145,6 +152,10 @@ def main(argv=None):
                 "platform": platform.platform(),
             },
             "entries": rec.entries,
+            # span rollups + predicted-vs-measured audit + metrics from
+            # the traced smoke run (benchmarks/bench_obs; informational,
+            # not under the bench gate)
+            "obs": obs_payload,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2)

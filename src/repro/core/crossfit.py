@@ -75,12 +75,20 @@ def _crossfit_engine(nuis: Nuisance, keys: jax.Array, X: jax.Array,
     tuning trials, and bootstrap replicates all run through one "how
     iterative steps run" knob — with the runtime's chunking and
     backend-downgrade ladder available to the fold axis too (pass a
-    TaskRuntime as ``executor`` to set a budget)."""
+    TaskRuntime as ``executor`` to set a budget, or one carrying a
+    repro.obs Tracer to get labelled crossfit spans with the fold-fit
+    chunk spans nested inside)."""
+    from repro.obs.trace import maybe_span
     from repro.runtime import as_runtime
     rt = as_runtime(executor, rules=rules)
     W = fold_weights(folds, k)                      # (k, n)
-    preds, states = rt.map(_fold_fit_fn(nuis), {"key": keys, "w": W},
-                           X, target, label="crossfit")
+    label = f"crossfit:{nuis.name}"
+    with maybe_span(rt.tracer, label, cat="crossfit", k=k,
+                    n=int(X.shape[0]), backend=rt.name):
+        preds, states = rt.map(_fold_fit_fn(nuis), {"key": keys, "w": W},
+                               X, target, label=label)
+        if rt.tracer is not None:
+            rt.tracer.sync((preds, states))
     preds = constrain(preds, ("fold", "batch"), rules)
     return _oof_select(preds, folds), states
 

@@ -23,6 +23,7 @@ arrays.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import weakref
 from typing import Any, Callable, Optional, Protocol, runtime_checkable
@@ -58,6 +59,24 @@ def _index(xs: Any, i: int) -> Any:
     return jax.tree_util.tree_map(lambda x: x[i], xs)
 
 
+# Observability taps (repro.obs): callables invoked with the closure on
+# every _JitCache miss — a miss is a fresh jit wrapper, i.e. a compile
+# the executor could not amortize.  Empty list (the default) costs one
+# falsy check per miss; hooks are installed scoped via jit_miss_hook().
+_JIT_MISS_HOOKS: list = []
+
+
+@contextlib.contextmanager
+def jit_miss_hook(cb: Callable[[Any], None]):
+    """Scoped registration of a jit-cache-miss observer (the tracer's
+    per-closure recompile counter)."""
+    _JIT_MISS_HOOKS.append(cb)
+    try:
+        yield
+    finally:
+        _JIT_MISS_HOOKS.remove(cb)
+
+
 class _JitCache:
     """Per-executor compiled-program reuse: ``map(fn, ...)`` called twice
     with the SAME closure object hits the same jit wrapper (and thus its
@@ -70,6 +89,9 @@ class _JitCache:
     def get(self, fn, build):
         f = self._cache.get(fn)
         if f is None:
+            if _JIT_MISS_HOOKS:
+                for hook in tuple(_JIT_MISS_HOOKS):
+                    hook(fn)
             f = build(fn)
             self._cache[fn] = f
         return f

@@ -462,6 +462,20 @@ def peak_temp_bytes(hlo_text: str) -> int:
     return peak
 
 
+def cost_summary(hlo_text: str, world: int = 1) -> Dict[str, float]:
+    """The one-call join the cost audit (repro.obs.audit) consumes:
+    trip-count-aware roofline totals from :func:`analyze` plus the
+    :func:`peak_temp_bytes` memory proxy, over one parse each.  World
+    defaults to 1 — the audit runs on single-process chunk programs."""
+    totals = analyze(hlo_text, world=world)
+    return {
+        "flops": totals.flops,
+        "bytes": totals.bytes,
+        "wire_bytes": totals.wire_bytes,
+        "peak_temp_bytes": float(peak_temp_bytes(hlo_text)),
+    }
+
+
 def analyze(hlo_text: str, world: int = 256) -> CostTotals:
     comps = parse_hlo(hlo_text)
     totals = CostTotals()

@@ -1,0 +1,25 @@
+# repro.obs — zero-dependency observability for the task runtime:
+#   trace.py    hierarchical span tracer (block_until_ready-honest
+#               durations), Chrome trace-event / Perfetto export,
+#               text tree, per-name rollups
+#   metrics.py  counters / gauges / histograms with a snapshot API
+#   audit.py    predicted-vs-measured cost audit joining traced chunks
+#               to the affine memory model and hlo_cost roofline
+# Thread ONE Tracer through TaskRuntime(tracer=...), sweep(tracer=...),
+# and crossfit (via a traced runtime); tracer=None everywhere is the
+# zero-overhead default.
+from repro.obs.audit import ChunkAudit, CostAudit
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import Span, Tracer, maybe_span
+
+__all__ = [
+    "ChunkAudit",
+    "CostAudit",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Span",
+    "Tracer",
+    "maybe_span",
+]

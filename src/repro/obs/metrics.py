@@ -1,0 +1,138 @@
+"""Zero-dependency metrics registry: counters, gauges, histograms.
+
+The runtime makes scheduling decisions (chunks dispatched, ladder
+downgrades, retries, jit-cache misses) and the memory model makes
+predictions (peak bytes, chosen chunk size) that previously vanished
+into an ad-hoc event list.  This registry gives each of them a durable,
+snapshot-able home:
+
+  Counter    monotone occurrence counts ("runtime.chunks",
+             "runtime.downgrades", "jit_cache_miss[<closure>]");
+  Gauge      last-written values ("runtime.predicted_peak_bytes[label]",
+             "runtime.chunk_size[label]");
+  Histogram  bounded-reservoir distributions ("runtime.chunk_seconds")
+             with exact count/sum/min/max and reservoir percentiles —
+             the substrate the serving layer's p50/p99 SLOs will read.
+
+Everything is plain host-side Python: no jax values are held (callers
+convert), so a registry never extends a tracer's lifetime to device
+buffers and never perturbs compilation.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional
+
+
+class Counter:
+    """Monotone event counter."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Last-written value (None until first set)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value: Optional[float] = None
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Value distribution with exact count/sum/min/max and percentiles
+    from a bounded reservoir (the first ``cap`` observations — enough
+    for per-chunk latencies, bounded for runtime-lifetime safety)."""
+
+    __slots__ = ("count", "total", "lo", "hi", "cap", "_values")
+
+    def __init__(self, cap: int = 4096) -> None:
+        self.count = 0
+        self.total = 0.0
+        self.lo = math.inf
+        self.hi = -math.inf
+        self.cap = int(cap)
+        self._values: List[float] = []
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.total += v
+        self.lo = min(self.lo, v)
+        self.hi = max(self.hi, v)
+        if len(self._values) < self.cap:
+            self._values.append(v)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def percentile(self, q: float) -> float:
+        """Reservoir percentile, q in [0, 1] (nearest-rank)."""
+        if not self._values:
+            return 0.0
+        vs = sorted(self._values)
+        rank = min(int(q * len(vs)), len(vs) - 1)
+        return vs[max(rank, 0)]
+
+    def summary(self) -> Dict[str, float]:
+        if not self.count:
+            return {"count": 0, "sum": 0.0}
+        return {
+            "count": self.count,
+            "sum": self.total,
+            "mean": self.mean,
+            "min": self.lo,
+            "max": self.hi,
+            "p50": self.percentile(0.50),
+            "p99": self.percentile(0.99),
+        }
+
+
+class MetricsRegistry:
+    """Named get-or-create store for the three instrument kinds, with
+    one JSON-friendly ``snapshot()`` for bench reports and tests."""
+
+    def __init__(self) -> None:
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter()
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge()
+        return g
+
+    def histogram(self, name: str, cap: int = 4096) -> Histogram:
+        h = self._histograms.get(name)
+        if h is None:
+            h = self._histograms[name] = Histogram(cap=cap)
+        return h
+
+    def snapshot(self) -> Dict[str, Dict]:
+        """Point-in-time view: {"counters": {...}, "gauges": {...},
+        "histograms": {name: summary dict}} — plain scalars only."""
+        return {
+            "counters": {k: c.value for k, c in sorted(self._counters.items())},
+            "gauges": {k: g.value for k, g in sorted(self._gauges.items())},
+            "histograms": {
+                k: h.summary() for k, h in sorted(self._histograms.items())
+            },
+        }

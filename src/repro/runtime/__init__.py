@@ -9,9 +9,16 @@
 #                 serial, bit-identical results), nested (outer x inner)
 #                 parallelism via map_product
 from repro.runtime.future import TaskFuture, TaskGraph, resolve
-from repro.runtime.memory import MemoryModel, memory_model, probe_peak_bytes
+from repro.runtime.memory import (
+    ChunkCost,
+    MemoryModel,
+    memory_model,
+    probe_chunk_cost,
+    probe_peak_bytes,
+)
 from repro.runtime.scheduler import (
     DOWNGRADE,
+    EventLog,
     RuntimeEvent,
     TaskRuntime,
     as_runtime,
@@ -21,10 +28,13 @@ __all__ = [
     "TaskFuture",
     "TaskGraph",
     "resolve",
+    "ChunkCost",
     "MemoryModel",
     "memory_model",
+    "probe_chunk_cost",
     "probe_peak_bytes",
     "DOWNGRADE",
+    "EventLog",
     "RuntimeEvent",
     "TaskRuntime",
     "as_runtime",

@@ -30,7 +30,7 @@ from typing import Any, Optional, Tuple
 
 import jax
 
-from repro.launch.hlo_cost import peak_temp_bytes
+from repro.launch.hlo_cost import cost_summary, peak_temp_bytes
 
 PROBE_CHUNK = 8
 
@@ -82,9 +82,9 @@ def _spec(tree: Any) -> Any:
     )
 
 
-def probe_peak_bytes(fn, xs: Any, args: Tuple[Any, ...], chunk: int) -> int:
-    """Peak-temp bytes of the ``chunk``-replicate vmapped program, from
-    compiled HLO (no execution)."""
+def _compiled_text(fn, xs: Any, args: Tuple[Any, ...], chunk: int) -> str:
+    """Post-optimization HLO of the ``chunk``-replicate vmapped program
+    (compile-only, no execution)."""
     elem = _element_spec(xs)
     xs_spec = jax.tree_util.tree_map(
         lambda e: jax.ShapeDtypeStruct((chunk,) + e.shape, e.dtype), elem
@@ -94,7 +94,13 @@ def probe_peak_bytes(fn, xs: Any, args: Tuple[Any, ...], chunk: int) -> int:
         return jax.vmap(lambda x_: fn(x_, *a))(xs_)
 
     lowered = jax.jit(batched).lower(xs_spec, *_spec(args))
-    return peak_temp_bytes(lowered.compile().as_text())
+    return lowered.compile().as_text()
+
+
+def probe_peak_bytes(fn, xs: Any, args: Tuple[Any, ...], chunk: int) -> int:
+    """Peak-temp bytes of the ``chunk``-replicate vmapped program, from
+    compiled HLO (no execution)."""
+    return peak_temp_bytes(_compiled_text(fn, xs, args, chunk))
 
 
 # Closure -> {input signature -> MemoryModel}.  Weak keys let dead
@@ -123,3 +129,48 @@ def memory_model(fn, xs: Any, args: Tuple[Any, ...], b: int) -> Optional[MemoryM
         model = None
     per_fn[sig] = model
     return model
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkCost:
+    """Compile-time cost truth for ONE chunk size of a mapped closure —
+    what the cost audit (repro.obs.audit) joins to measured chunk
+    durations.  ``peak_temp_bytes`` is the exact HLO peak at this size
+    (vs the affine model's interpolation); flops/hbm_bytes are the
+    trip-count-aware roofline totals of one chunk execution."""
+
+    chunk: int
+    peak_temp_bytes: float
+    flops: float
+    hbm_bytes: float
+
+
+# Closure -> {(input signature, chunk) -> Optional[ChunkCost]}.  Same
+# weak-key shape as _MODEL_CACHE: audits of a hot closure lower each
+# chunk size at most once.
+_COST_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def probe_chunk_cost(
+    fn, xs: Any, args: Tuple[Any, ...], chunk: int
+) -> Optional[ChunkCost]:
+    """Lower the ``chunk``-sized program once and read its exact peak /
+    roofline costs off the compiled HLO.  Returns None when the closure
+    cannot be lowered from specs alone (the audit then skips the chunk
+    rather than guessing)."""
+    sig = (_signature(xs, args), int(chunk))
+    per_fn = _COST_CACHE.setdefault(fn, {})
+    if sig in per_fn:
+        return per_fn[sig]
+    try:
+        cs = cost_summary(_compiled_text(fn, xs, args, chunk), world=1)
+        cost = ChunkCost(
+            chunk=int(chunk),
+            peak_temp_bytes=cs["peak_temp_bytes"],
+            flops=cs["flops"],
+            hbm_bytes=cs["bytes"],
+        )
+    except Exception:
+        cost = None
+    per_fn[sig] = cost
+    return cost

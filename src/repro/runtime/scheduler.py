@@ -36,16 +36,20 @@ callers onto the runtime costs nothing on the happy path.
 
 from __future__ import annotations
 
+import collections
+import contextlib
 import dataclasses
 import weakref
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.inference.executor import Executor, make_executor
+from repro.inference.executor import Executor, jit_miss_hook, make_executor
+from repro.obs.audit import ChunkAudit
+from repro.obs.trace import Tracer, maybe_span
 from repro.runtime.future import TaskFuture, TaskGraph, resolve
-from repro.runtime.memory import MemoryModel, memory_model
+from repro.runtime.memory import MemoryModel, memory_model, probe_chunk_cost
 
 # The fault-tolerance ladder: each backend's failure falls back to the
 # next-simpler one.  serial has no fallback — its failure is the task's.
@@ -61,6 +65,53 @@ class RuntimeEvent:
     chunk_index: int = -1
     backend: str = ""
     detail: str = ""
+
+
+class EventLog:
+    """Bounded RuntimeEvent record: list-like for readers, ring-buffered
+    so a long-lived runtime (thousands of ``map`` calls) cannot grow an
+    unbounded host-side list.  ``total`` counts every event ever
+    appended; ``since(start_total)`` recovers a suffix recorded from a
+    ``total`` checkpoint even after older entries were dropped — the
+    drop-safe replacement for ``events[start:]`` slicing.  The tracer is
+    the durable record; this log is the cheap always-on tail."""
+
+    def __init__(self, maxlen: int = 512):
+        self._buf: "collections.deque[RuntimeEvent]" = collections.deque(
+            maxlen=maxlen
+        )
+        self._total = 0
+
+    def append(self, event: RuntimeEvent) -> None:
+        self._buf.append(event)
+        self._total += 1
+
+    @property
+    def total(self) -> int:
+        return self._total
+
+    @property
+    def dropped(self) -> int:
+        return self._total - len(self._buf)
+
+    def since(self, start_total: int) -> Tuple[RuntimeEvent, ...]:
+        """Events appended at or after the ``total`` checkpoint
+        ``start_total`` that are still buffered."""
+        skip = max(0, start_total - self.dropped)
+        return tuple(self._buf)[skip:]
+
+    def clear(self) -> None:
+        self._buf.clear()
+        self._total = 0
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def __iter__(self) -> Iterator[RuntimeEvent]:
+        return iter(tuple(self._buf))
+
+    def __getitem__(self, ix):
+        return tuple(self._buf)[ix]
 
 
 def _leading_dim(xs: Any) -> int:
@@ -109,6 +160,15 @@ class TaskRuntime:
                    memory model (CausalConfig.runtime_chunk).
     max_retries    extra attempts a chunk gets after its first failure
                    (each attempt moves one rung down the ladder).
+    tracer         optional repro.obs.Tracer: spans around map / chunk /
+                   DAG-node execution (block_until_ready-honest), chunk
+                   latency histograms, downgrade/retry/jit-miss
+                   counters, and the predicted-vs-measured cost audit
+                   joining each chunk to its hlo_cost probes.  None (the
+                   default) records nothing and forces nothing — the
+                   same compiled programs run either way.
+    events_maxlen  ring-buffer capacity of the always-on RuntimeEvent
+                   tail (EventLog; the tracer is the unbounded record).
     """
 
     # fn -> fused (outer, inner) wrapper, weak so dead closures drop out
@@ -126,6 +186,8 @@ class TaskRuntime:
         max_retries: int = 2,
         mesh=None,
         rules=None,
+        tracer: Optional[Tracer] = None,
+        events_maxlen: int = 512,
     ):
         self._primary = make_executor(executor, mesh=mesh, rules=rules)
         self._mesh = mesh
@@ -133,8 +195,25 @@ class TaskRuntime:
         self.memory_budget = int(memory_budget)
         self.chunk = int(chunk)
         self.max_retries = int(max_retries)
-        self.events: List[RuntimeEvent] = []
+        self.tracer = tracer
+        self.events = EventLog(maxlen=events_maxlen)
         self._graph = TaskGraph()
+
+    def _emit(self, event: RuntimeEvent) -> None:
+        """Record one scheduling decision: always into the bounded
+        EventLog; when tracing, also as an instant marker + counter."""
+        self.events.append(event)
+        tr = self.tracer
+        if tr is not None:
+            tr.instant(
+                f"runtime.event.{event.action}",
+                cat="runtime",
+                label=event.label,
+                chunk_index=event.chunk_index,
+                backend=event.backend,
+                detail=event.detail,
+            )
+            tr.metrics.counter(f"runtime.events.{event.action}").inc()
 
     # -- identity -------------------------------------------------------
     @property
@@ -156,23 +235,94 @@ class TaskRuntime:
                 out.append(exe)
         return tuple(out)
 
+    def _jit_miss_scope(self, label: str):
+        """While tracing, count executor jit-cache misses (fresh compiled
+        wrappers) per closure under ``jit_cache_miss[...]`` counters."""
+        tr = self.tracer
+        if tr is None:
+            return contextlib.nullcontext()
+
+        def on_miss(fn):
+            name = getattr(fn, "__name__", type(fn).__name__)
+            tr.metrics.counter(f"jit_cache_miss[{label or name}]").inc()
+
+        return jit_miss_hook(on_miss)
+
     def _run_chunk(
-        self, fn, xs_c: Any, args: Tuple[Any, ...], label: str, index: int
+        self,
+        fn,
+        xs_c: Any,
+        args: Tuple[Any, ...],
+        label: str,
+        index: int,
+        model: Optional[MemoryModel] = None,
     ) -> Any:
         err: Optional[BaseException] = None
-        for attempt, exe in enumerate(self._ladder()):
+        ladder = self._ladder()
+        for attempt, exe in enumerate(ladder):
             if attempt > self.max_retries:
                 break
             if attempt:
-                self.events.append(
+                self._emit(
                     RuntimeEvent("downgrade", label, index, exe.name, str(err))
                 )
             try:
-                return exe.map(fn, xs_c, *args)
+                tr = self.tracer
+                if tr is None:
+                    return exe.map(fn, xs_c, *args)
+                return self._run_chunk_traced(
+                    tr, exe, fn, xs_c, args, label, index, model
+                )
             except Exception as e:  # noqa: BLE001 — the ladder handles it
                 err = e
+                # a re-attempt is coming iff the ladder has a lower rung
+                # left AND the retry budget allows it — that re-attempt
+                # is a distinct "retry" event carrying the trigger
+                if attempt < self.max_retries and attempt + 1 < len(ladder):
+                    self._emit(
+                        RuntimeEvent("retry", label, index, exe.name, str(e))
+                    )
         assert err is not None
         raise err
+
+    def _run_chunk_traced(
+        self, tr, exe, fn, xs_c, args, label: str, index: int,
+        model: Optional[MemoryModel],
+    ) -> Any:
+        """One chunk attempt under an open span: duration is
+        block_until_ready-honest, latency feeds the chunk histogram,
+        and — when the memory model sized this map — the chunk joins
+        the predicted-vs-measured cost audit."""
+        csize = _leading_dim(xs_c)
+        with tr.span(
+            "runtime.chunk",
+            cat="runtime",
+            label=label,
+            chunk_index=index,
+            chunk_size=csize,
+            backend=exe.name,
+        ) as sp:
+            with self._jit_miss_scope(label):
+                out = exe.map(fn, xs_c, *args)
+            tr.sync(out)
+        tr.metrics.counter("runtime.chunks").inc()
+        tr.metrics.histogram("runtime.chunk_seconds").observe(sp.duration_s)
+        if model is not None:
+            cost = probe_chunk_cost(fn, xs_c, args, csize)
+            if cost is not None:
+                tr.audit.record(
+                    ChunkAudit(
+                        label=label,
+                        chunk_index=index,
+                        chunk_size=csize,
+                        predicted_peak_bytes=model.peak(csize),
+                        probed_peak_bytes=cost.peak_temp_bytes,
+                        flops=cost.flops,
+                        hbm_bytes=cost.hbm_bytes,
+                        measured_s=sp.duration_s,
+                    )
+                )
+        return out
 
     # -- chunk sizing ---------------------------------------------------
     def plan_chunk(
@@ -197,17 +347,34 @@ class TaskRuntime:
         b = _leading_dim(xs)
         if b == 0:
             return _empty_like_mapped(fn, xs, args)
-        chunk, _ = self.plan_chunk(fn, xs, args, b)
-        if chunk >= b:
-            return self._run_chunk(fn, xs, args, label, 0)
-        self.events.append(
-            RuntimeEvent("chunk", label, -1, self._primary.name, f"b={b} chunk={chunk}")
-        )
-        outs = [
-            self._run_chunk(fn, _slice(xs, lo, min(lo + chunk, b)), args, label, i)
-            for i, lo in enumerate(range(0, b, chunk))
-        ]
-        return jax.tree_util.tree_map(lambda *ys: jnp.concatenate(ys, axis=0), *outs)
+        chunk, model = self.plan_chunk(fn, xs, args, b)
+        tr = self.tracer
+        with maybe_span(
+            tr, "runtime.map", cat="runtime", label=label, b=b, chunk=chunk,
+            backend=self._primary.name,
+        ):
+            if tr is not None and model is not None:
+                tag = f"[{label}]" if label else ""
+                tr.metrics.gauge(f"runtime.chunk_size{tag}").set(chunk)
+                tr.metrics.gauge(f"runtime.predicted_peak_bytes{tag}").set(
+                    model.peak(chunk)
+                )
+            if chunk >= b:
+                return self._run_chunk(fn, xs, args, label, 0, model)
+            self._emit(
+                RuntimeEvent(
+                    "chunk", label, -1, self._primary.name, f"b={b} chunk={chunk}"
+                )
+            )
+            outs = [
+                self._run_chunk(
+                    fn, _slice(xs, lo, min(lo + chunk, b)), args, label, i, model
+                )
+                for i, lo in enumerate(range(0, b, chunk))
+            ]
+            return jax.tree_util.tree_map(
+                lambda *ys: jnp.concatenate(ys, axis=0), *outs
+            )
 
     # -- nested parallelism ---------------------------------------------
     def map_product(
@@ -274,13 +441,22 @@ class TaskRuntime:
 
     def gather(self, futures):
         """Execute the DAG below ``futures`` (deterministic topological
-        order) and return their results, preserving structure."""
+        order) and return their results, preserving structure.  With a
+        tracer, every executed map node gets a ``dag.task`` span (its
+        chunk spans nest inside)."""
         single = isinstance(futures, TaskFuture)
         targets = [futures] if single else list(futures)
-        self._graph.execute(
-            targets,
-            lambda f: self.map(f.fn, resolve(f.xs), *resolve(f.args), label=f.label),
-        )
+
+        def run_map(f: TaskFuture):
+            with maybe_span(
+                self.tracer, "dag.task", cat="dag",
+                label=f.label or f"task{f.task_id}", task_id=f.task_id,
+            ):
+                return self.map(
+                    f.fn, resolve(f.xs), *resolve(f.args), label=f.label
+                )
+
+        self._graph.execute(targets, run_map)
         out = [t.result() for t in targets]
         return out[0] if single else out
 
@@ -293,9 +469,12 @@ def as_runtime(
     memory_budget: int = 0,
     chunk: int = 0,
     max_retries: int = 2,
+    tracer: Optional[Tracer] = None,
 ) -> TaskRuntime:
     """Coerce an executor name / Executor / TaskRuntime into a
-    TaskRuntime — the adapter every migrated caller goes through."""
+    TaskRuntime — the adapter every migrated caller goes through.  A
+    TaskRuntime passes through untouched (it keeps its own tracer);
+    ``tracer`` attaches to freshly-built runtimes only."""
     if isinstance(executor, TaskRuntime):
         return executor
     return TaskRuntime(
@@ -305,4 +484,5 @@ def as_runtime(
         memory_budget=memory_budget,
         chunk=chunk,
         max_retries=max_retries,
+        tracer=tracer,
     )

@@ -54,6 +54,7 @@ from repro.config import CausalConfig
 from repro.core.estimator import resolve_scheme
 from repro.core.final_stage import cate_basis
 from repro.core.registry import EstimatorSpec, get_spec, nuisance_signature
+from repro.obs.trace import maybe_span
 from repro.sweep.panel import ColumnResult, EffectPanel
 from repro.sweep.spec import SweepSpec, segment_counts
 
@@ -74,7 +75,7 @@ def _segment_mask(sids: jax.Array, sid) -> jax.Array:
     return (sids == sid).astype(jnp.float32)
 
 
-def _runtime(cfg: CausalConfig, executor):
+def _runtime(cfg: CausalConfig, executor, tracer=None):
     from repro.runtime import as_runtime
 
     return as_runtime(
@@ -82,6 +83,7 @@ def _runtime(cfg: CausalConfig, executor):
         memory_budget=cfg.runtime_memory_budget,
         chunk=cfg.sweep_chunk or cfg.runtime_chunk,
         max_retries=cfg.runtime_max_retries,
+        tracer=tracer,
     )
 
 
@@ -156,8 +158,10 @@ def _column_ci(cell, cfg: CausalConfig, rt, xs, data, key, col_index: int):
     )
 
 
-def _events(rt, start: int = 0) -> Tuple[str, ...]:
-    return tuple(f"{e.action}:{e.backend}" for e in rt.events[start:])
+def _events(rt, start_total: int = 0) -> Tuple[str, ...]:
+    # EventLog.since is drop-safe: start_total is an events.total
+    # checkpoint, valid even if the ring dropped older entries
+    return tuple(f"{e.action}:{e.backend}" for e in rt.events.since(start_total))
 
 
 def _want_ci(cfg: CausalConfig, with_ci: Optional[bool]) -> bool:
@@ -175,6 +179,7 @@ def _run_column(
     key,
     executor,
     with_ci: Optional[bool],
+    tracer=None,
 ) -> ColumnResult:
     """One column as E masked single-fit cells through the runtime."""
     cell = rspec.weighted_fit(cfg)
@@ -183,11 +188,15 @@ def _run_column(
         "key": column_keys(key, col_index, n_segments),
         "sid": jnp.arange(n_segments, dtype=jnp.int32),
     }
-    rt = _runtime(cfg, executor)
-    out = rt.map(_make_masked_cell(cell), xs, data, label=f"sweep:{rspec.name}")
-    extra: Dict[str, Any] = {}
-    if _want_ci(cfg, with_ci):
-        extra = _column_ci(cell, cfg, rt, xs, data, key, col_index)
+    rt = _runtime(cfg, executor, tracer)
+    with maybe_span(
+        rt.tracer, f"sweep.column[{col_index}]", cat="sweep",
+        estimator=rspec.name, segments=n_segments,
+    ):
+        out = rt.map(_make_masked_cell(cell), xs, data, label=f"sweep:{rspec.name}")
+        extra: Dict[str, Any] = {}
+        if _want_ci(cfg, with_ci):
+            extra = _column_ci(cell, cfg, rt, xs, data, key, col_index)
     ci_tag = ()
     if "ci_scheme" in extra:
         ci_tag = (f"ci:{extra['ci_scheme']}",)
@@ -213,6 +222,7 @@ def _run_shared_group(
     key,
     executor,
     with_ci: Optional[bool],
+    tracer=None,
 ) -> List[Tuple[int, ColumnResult]]:
     """Columns differing only in final stage: ONE residual pass per
     segment (keyed on the first member's lineage), then a cheap
@@ -221,18 +231,22 @@ def _run_shared_group(
     resid_fn = rspec.residual_fit(cfg0)
     keys = column_keys(key, first_idx, n_segments)
     sid = jnp.arange(n_segments, dtype=jnp.int32)
-    rt = _runtime(cfg0, executor)
+    rt = _runtime(cfg0, executor, tracer)
     # the shared residual pass is group-fatal by design (every member
     # consumes it); everything after is isolated per member
-    resids = rt.map(
-        _make_masked_resid(resid_fn),
-        {"key": keys, "sid": sid},
-        dict(base_data),
-        label=f"sweep:{rspec.name}:resid",
-    )
+    with maybe_span(
+        rt.tracer, f"sweep.group:{rspec.name}", cat="sweep",
+        members=len(members), segments=n_segments,
+    ):
+        resids = rt.map(
+            _make_masked_resid(resid_fn),
+            {"key": keys, "sid": sid},
+            dict(base_data),
+            label=f"sweep:{rspec.name}:resid",
+        )
     results = []
     for col_index, cfg in members:
-        ev_start = len(rt.events)
+        ev_start = rt.events.total
         try:
             col = _shared_member_column(
                 rspec, cfg, first_idx, col_index, base_data, resids,
@@ -263,19 +277,23 @@ def _shared_member_column(
     ev_start: int,
 ) -> ColumnResult:
     data = _column_data(base_data, cfg)
-    out = rt.map(
-        _make_masked_final(rspec.final_fit(cfg)),
-        {"sid": sid, "resid": resids},
-        data,
-        label=f"sweep:{rspec.name}:final",
-    )
-    extra: Dict[str, Any] = {}
-    if _want_ci(cfg, with_ci):
-        # replicate refits reweight the nuisances, so CIs cannot
-        # reuse the shared residuals — they run the full cell
-        cell = rspec.weighted_fit(cfg)
-        xs = {"key": keys, "sid": sid}
-        extra = _column_ci(cell, cfg, rt, xs, data, key, first_idx)
+    with maybe_span(
+        rt.tracer, f"sweep.column[{col_index}]", cat="sweep",
+        estimator=rspec.name, shared_nuisance=col_index != first_idx,
+    ):
+        out = rt.map(
+            _make_masked_final(rspec.final_fit(cfg)),
+            {"sid": sid, "resid": resids},
+            data,
+            label=f"sweep:{rspec.name}:final",
+        )
+        extra: Dict[str, Any] = {}
+        if _want_ci(cfg, with_ci):
+            # replicate refits reweight the nuisances, so CIs cannot
+            # reuse the shared residuals — they run the full cell
+            cell = rspec.weighted_fit(cfg)
+            xs = {"key": keys, "sid": sid}
+            extra = _column_ci(cell, cfg, rt, xs, data, key, first_idx)
     ci_tag = ()
     if "ci_scheme" in extra:
         ci_tag = (f"ci:{extra['ci_scheme']}",)
@@ -303,6 +321,7 @@ def _segmented_or_cells(
     key,
     executor,
     with_ci: Optional[bool],
+    tracer=None,
 ) -> ColumnResult:
     """mode="segmented" dispatch: the one-pass kernels where they apply,
     the plain cell path otherwise."""
@@ -310,11 +329,18 @@ def _segmented_or_cells(
 
     if not segmented_supported(rspec, cfg):
         return _run_column(
-            rspec, cfg, col_index, base_data, n_segments, key, executor, with_ci
+            rspec, cfg, col_index, base_data, n_segments, key, executor,
+            with_ci, tracer,
         )
-    out = segmented_column(
-        cfg, base_data, n_segments, jax.random.fold_in(key, col_index)
-    )
+    with maybe_span(
+        tracer, f"sweep.column[{col_index}]", cat="sweep",
+        estimator=rspec.name, segmented=True,
+    ) as sp:
+        out = segmented_column(
+            cfg, base_data, n_segments, jax.random.fold_in(key, col_index)
+        )
+        if tracer is not None and sp is not None:
+            tracer.sync(out)
     return ColumnResult(
         estimator=rspec.name,
         cfg=cfg,
@@ -339,6 +365,7 @@ def sweep(
     mode: str = "cells",
     reuse: bool = True,
     with_ci: Optional[bool] = None,
+    tracer=None,
 ) -> EffectPanel:
     """Run the (segments × estimator-configs) grid as batched programs.
 
@@ -357,6 +384,11 @@ def sweep(
                       draws: a non-resampling cfg.inference (jackknife)
                       substitutes the pairs bootstrap, tagged
                       "ci:pairs" in the column's events.
+    tracer            optional repro.obs.Tracer: every column (and
+                      shared-nuisance group) opens a labelled span, and
+                      the runtimes under it inherit the tracer — chunk
+                      spans, metrics, and the cost audit nest inside.
+                      None (the default) changes nothing.
     """
     if mode not in ("cells", "segmented"):
         raise ValueError(f"unknown sweep mode {mode!r} (cells | segmented)")
@@ -400,7 +432,8 @@ def sweep(
             for idx, cfg in members:
                 try:
                     results[idx] = _segmented_or_cells(
-                        rspec, cfg, idx, base_data, n_seg, key, executor, with_ci
+                        rspec, cfg, idx, base_data, n_seg, key, executor,
+                        with_ci, tracer,
                     )
                 except Exception as err:  # noqa: BLE001
                     results[idx] = ColumnResult(
@@ -417,13 +450,15 @@ def sweep(
         try:
             if shareable:
                 for idx, col in _run_shared_group(
-                    rspec, members, base_data, n_seg, key, executor, with_ci
+                    rspec, members, base_data, n_seg, key, executor,
+                    with_ci, tracer,
                 ):
                     results[idx] = col
             else:
                 for idx, cfg in members:
                     results[idx] = _run_column(
-                        rspec, cfg, idx, base_data, n_seg, key, executor, with_ci
+                        rspec, cfg, idx, base_data, n_seg, key, executor,
+                        with_ci, tracer,
                     )
         except Exception as err:  # noqa: BLE001 — one column/group must
             # not poison the panel; the runtime ladder already retried

@@ -200,6 +200,30 @@ def test_partial_failure_mid_run_is_bitwise():
     assert sum(e.action == "downgrade" for e in rt.events) == 1
 
 
+def test_retry_events_carry_triggering_exception():
+    """Every re-attempt is a distinct "retry" event recording the
+    backend that failed and the exception that triggered the fallback
+    (satellite of the observability PR: recoveries must be auditable)."""
+    rt = TaskRuntime(FailingExecutor(), chunk=3)
+    rt.map(_double, _XS, _C)
+    retries = [e for e in rt.events if e.action == "retry"]
+    downs = [e for e in rt.events if e.action == "downgrade"]
+    assert len(retries) == 3  # one per failed chunk attempt
+    assert len(retries) == len(downs)  # each retry produced a downgrade
+    assert all(e.backend == "failing" for e in retries)
+    assert all("synthetic worker loss" in e.detail for e in retries)
+    assert [e.chunk_index for e in retries] == [0, 1, 2]
+
+
+def test_exhausted_ladder_emits_no_retry_event():
+    """With no retry budget there is no re-attempt, hence no "retry"
+    event — the failure propagates instead."""
+    rt = TaskRuntime(FailingExecutor(), max_retries=0)
+    with pytest.raises(RuntimeError, match="synthetic"):
+        rt.map(_double, _XS, _C)
+    assert not [e for e in rt.events if e.action == "retry"]
+
+
 def test_exhausted_ladder_reraises():
     rt = TaskRuntime(FailingExecutor(), max_retries=0)
     with pytest.raises(RuntimeError, match="synthetic"):
@@ -247,6 +271,28 @@ def test_map_product_empty_axis():
     out = TaskRuntime("vmap").map_product(
         cell, jnp.zeros((0,), jnp.float32), jnp.arange(4.0))
     assert out.shape == (0, 4)
+
+
+def test_map_product_empty_inner_axis():
+    """Zero-length INNER axis: the flattened product axis is empty, so
+    the zero-replicate path must reshape back to (b_outer, 0, ...)."""
+    def cell(xo, xi):
+        return {"v": xo * xi, "s": xo + xi}
+
+    out = TaskRuntime("vmap").map_product(
+        cell, jnp.arange(3.0), jnp.zeros((0,), jnp.float32))
+    assert out["v"].shape == (3, 0)
+    assert out["s"].shape == (3, 0)
+    assert out["v"].dtype == jnp.float32
+
+
+def test_map_product_both_axes_empty():
+    def cell(xo, xi):
+        return xo * xi
+
+    out = TaskRuntime("vmap").map_product(
+        cell, jnp.zeros((0,), jnp.float32), jnp.zeros((0,), jnp.float32))
+    assert out.shape == (0, 0)
 
 
 # ---------------------------------------------------------------------------
