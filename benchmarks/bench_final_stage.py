@@ -7,7 +7,10 @@ Z = rt ⊙ phi (plus its HC0 meat pass); the chunked path lax.scans row
 blocks so peak temporaries are O(row_block · p_phi).  On one host the
 interesting number is the runtime cost of streaming (it buys bounded
 memory, not speed); the peak-temp claim itself is asserted by
-tests/test_moments.py against the post-optimization HLO.
+tests/test_moments.py against the post-optimization HLO.  The third
+column, ``strategy="pallas"``, streams the same two passes through the
+fused seg_gram lowerings — the measured path that closes (and on CPU
+reverses) the chunked-vs-whole runtime gap.
 """
 from __future__ import annotations
 
@@ -36,21 +39,25 @@ def run(n=100_000, p=20, p_phi=4, row_block=4096, csv=print):
     mt = jnp.full((n,), 0.5, jnp.float32)
     phi = cate_basis(d.X, p_phi)
 
-    jitted = {rb: jax.jit(lambda y, t, m1, m2, ph, rb=rb: fit_final_stage(
-        y, t, m1, m2, ph, row_block=rb).theta)
-        for rb in (0, row_block)}
+    jitted = {(rb, st): jax.jit(
+        lambda y, t, m1, m2, ph, rb=rb, st=st: fit_final_stage(
+            y, t, m1, m2, ph, row_block=rb, strategy=st).theta)
+        for rb, st in ((0, None), (row_block, None), (row_block, "pallas"))}
 
-    def timed(rb):
+    def timed(rb, st=None):
         def f():
-            jax.block_until_ready(jitted[rb](d.y, d.t, my, mt, phi))
+            jax.block_until_ready(jitted[(rb, st)](d.y, d.t, my, mt, phi))
         return _time(f)
 
     t_whole = timed(0)
     t_chunk = timed(row_block)
+    t_pallas = timed(row_block, "pallas")
     csv(f"final_stage_whole_n{n}_pphi{p_phi},{t_whole*1e6:.0f},baseline")
     csv(f"final_stage_chunked_n{n}_pphi{p_phi}_rb{row_block},"
         f"{t_chunk*1e6:.0f},ratio={t_chunk/max(t_whole, 1e-12):.2f}x")
-    return [(n, t_whole, t_chunk)]
+    csv(f"final_stage_pallas_n{n}_pphi{p_phi}_rb{row_block},"
+        f"{t_pallas*1e6:.0f},ratio={t_pallas/max(t_whole, 1e-12):.2f}x")
+    return [(n, t_whole, t_chunk, t_pallas)]
 
 
 def main(argv=None):

@@ -1,0 +1,70 @@
+"""Fused segment-Gram kernel micro-benchmark (repro.kernels.seg_gram).
+
+The segmented sweep's hot shape: a fold-segmented augmented Gram over
+the combined id ``segment*K + fold`` (S = E*K segments, q design
+columns).  Baseline is the one-hot einsum the moments engine lowers to
+by default (``'ns,ni,nj->sij'`` — materializes the (n, S) mask);
+against it, the dispatch-default fused lowering (XLA scatter on CPU,
+the Pallas kernel on TPU), which never builds the mask.
+
+Names carry the ``kernel_seg_gram`` prefix (gated in
+benchmarks/compare.py — the fused path must not regress).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.seg_gram import ops as sg_ops
+
+
+def _time(fn, reps=5):
+    fn()  # warm-up/compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(n=16_384, q=12, n_segments=192, row_block=1024, csv=print, reps=5):
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    U = jax.random.normal(ks[0], (n, q), jnp.float32)
+    seg = jax.random.randint(ks[1], (n,), 0, n_segments)
+    w = jax.random.exponential(ks[2], (n,)).astype(jnp.float32)
+    tag = f"n{n}_q{q}_S{n_segments}"
+
+    @jax.jit
+    def onehot(U, seg, w):
+        oh = jax.nn.one_hot(seg, n_segments, dtype=jnp.float32)
+        return jnp.einsum("ns,n,ni,nj->sij", oh, w, U, U)
+
+    fused = jax.jit(lambda U, seg, w: sg_ops.segment_outer(
+        U, U, seg, n_segments, w=w, row_block=row_block))
+
+    t_oh = _time(lambda: jax.block_until_ready(onehot(U, seg, w)), reps)
+    t_fused = _time(lambda: jax.block_until_ready(fused(U, seg, w)), reps)
+    csv(f"kernel_seg_gram_onehot_{tag},{t_oh*1e6:.0f},baseline")
+    csv(f"kernel_seg_gram_{sg_ops.default_backend()}_{tag},"
+        f"{t_fused*1e6:.0f},speedup={t_oh/max(t_fused, 1e-12):.2f}x")
+    return {"onehot": t_oh, "fused": t_fused}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="sweep-scale rows (n=65536)")
+    args = ap.parse_args(argv)
+    if args.full:
+        run(n=65_536)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

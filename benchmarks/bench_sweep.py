@@ -19,11 +19,14 @@ Three executions of the SAME E-segment DML estimation:
 
 The acceptance bar (ISSUE 5): >= 3x over the serial loop at E=64 on
 CPU — carried by the segmented path, with the cells path's scheduling
-win reported alongside.
+win reported alongside.  A fourth row re-runs the segmented path under
+``row_block_strategy="pallas"`` (the fused seg_gram lowerings in the
+fold-Gram / MM-loop / final-stage hot spots — ISSUE 7).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -81,14 +84,27 @@ def run(n=16_384, p=10, n_segments=64, n_folds=3, row_block=1024,
     mae_seg = float(jnp.abs(seg.columns[0].ates - 1.0).mean())
     mae_cells = float(jnp.abs(panel.columns[0].ates - 1.0).mean())
 
+    # segmented + row_block_strategy="pallas": the fused seg_gram
+    # lowerings replace the one-hot einsums in the fold-Gram / MM-loop
+    # / final-stage hot spots (tolerance-certified vs chunked by the
+    # conformance suite)
+    cfg_p = dataclasses.replace(cfg, row_block_strategy="pallas")
+    spec_p = SweepSpec(n_segments=n_segments, columns=(("dml", cfg_p),))
+    t_pal = _timeit(lambda: jax.block_until_ready(
+        sweep(spec_p, mode="segmented", **kw).columns[0].thetas), reps)
+    pal = sweep(spec_p, mode="segmented", **kw)
+    mae_pal = float(jnp.abs(pal.columns[0].ates - 1.0).mean())
+
     csv(f"sweep_serial_loop_{tag},{t_ser*1e6:.0f},baseline")
     csv(f"sweep_cells_vmap_{tag},{t_cells*1e6:.0f},"
         f"speedup={t_ser/t_cells:.2f}x identity={identity} "
         f"mae={mae_cells:.3f}")
     csv(f"sweep_segmented_{tag},{t_seg*1e6:.0f},"
         f"speedup={t_ser/t_seg:.2f}x mae={mae_seg:.3f}")
+    csv(f"sweep_segmented_pallas_{tag},{t_pal*1e6:.0f},"
+        f"speedup={t_ser/t_pal:.2f}x mae={mae_pal:.3f}")
     return {"serial": t_ser, "cells": t_cells, "segmented": t_seg,
-            "identity": identity}
+            "segmented_pallas": t_pal, "identity": identity}
 
 
 def main(argv=None):

@@ -2,8 +2,9 @@
 committed BENCH_baseline.json and fail on slowdowns past the threshold.
 
 Only entries whose name starts with a gated prefix participate
-(crossfit / bootstrap / final_stage / iv / sweep — the perf wins of
-PRs 1-5 this gate locks in); other entries are informational.  A gated baseline
+(crossfit / bootstrap / final_stage / iv / sweep / kernel_seg_gram —
+the perf wins of PRs 1-7 this gate locks in); other entries are
+informational.  A gated baseline
 entry MISSING from the new results also fails: silently dropping a
 benchmark is how regressions hide.
 
@@ -23,7 +24,14 @@ import argparse
 import json
 import sys
 
-GATED_PREFIXES = ("crossfit", "bootstrap", "final_stage", "iv", "sweep")
+GATED_PREFIXES = (
+    "crossfit",
+    "bootstrap",
+    "final_stage",
+    "iv",
+    "sweep",
+    "kernel_seg_gram",
+)
 
 
 def load_entries(path: str) -> dict:

@@ -123,6 +123,15 @@ def main(argv=None):
     else:
         bench_sweep.run(csv=rec)
 
+    print("# --- fused segment-Gram kernel vs one-hot einsum ---")
+    from benchmarks import bench_seg_gram
+    if args.full:
+        bench_seg_gram.run(n=65_536, csv=rec)
+    elif args.smoke:
+        bench_seg_gram.run(n=8192, csv=rec)
+    else:
+        bench_seg_gram.run(csv=rec)
+
     print("# --- observability: traced smoke run + cost audit ---")
     from benchmarks import bench_obs
     if args.smoke:

@@ -251,8 +251,14 @@ class CausalConfig:
     # bit-identical for equal row_block (the moments contract); the
     # knob exists so the conformance harness can assert that equality
     # at the ESTIMATOR level, and so perf work can trade memory for
-    # fusion freedom without touching call sites.
-    row_block_strategy: str = "chunked"  # chunked | whole
+    # fusion freedom without touching call sites.  "pallas" routes the
+    # Gram-shaped forms through the fused mask→weight→residualize→
+    # accumulate kernel family (repro.kernels.seg_gram: compiled
+    # mosaic on TPU, a fused XLA scatter lowering on CPU, interpret
+    # mode for certification); forms without a fused builder ladder
+    # back to "chunked".  Parity with "chunked" is tolerance-certified
+    # (≤1e-6 estimator-wide), not bitwise.
+    row_block_strategy: str = "chunked"  # chunked | whole | pallas
     mlp_hidden: Tuple[int, ...] = (256, 256)
     mlp_steps: int = 200
     mlp_lr: float = 1e-3

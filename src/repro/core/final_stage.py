@@ -20,7 +20,11 @@ All sufficient statistics come from the streaming moments engine
                   constrained on the ``rows`` mesh axis; the (p,p)
                   moments are the only thing reduced — the same shape
                   as Ray's driver-side aggregation but executed as one
-                  psum.
+                  psum.  ``strategy="pallas"`` keeps the same two-pass
+                  structure but takes each pass through the fused
+                  seg_gram kernel (one HBM pass per moment; the
+                  measured CPU lowering closes the chunked-vs-whole
+                  runtime gap at n=100k — benchmarks/bench_final_stage).
 
 Inference: heteroskedasticity-robust (HC0) sandwich covariance, matching
 EconML's ``StatsModelsLinearRegression`` final stage.

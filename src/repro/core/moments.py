@@ -30,6 +30,18 @@ Memory model
                           ~ O(R·q + q²).  n is no longer bounded by a
                           single dense allocation: the actual
                           "industrial scale" claim.
+      strategy "pallas"   the fused mask→weight→residualize→accumulate
+                          kernel (repro.kernels.seg_gram): one HBM
+                          pass per form — compiled mosaic on TPU, a
+                          fused XLA scatter/matmul lowering elsewhere,
+                          interpret mode for certification.  Forms
+                          without a fused builder (the dense-weight
+                          ``fold_weighted_gram``, the two-weight
+                          ``weighted_gram_and_vec``) fall back to
+                          "chunked" — the pallas→chunked→whole ladder.
+                          Parity with "chunked" is tolerance-certified
+                          (≤1e-6 estimator-wide, conformance suite),
+                          not bitwise.
 
 Bit-identity contract
 ---------------------
@@ -72,6 +84,20 @@ def resolve_row_block(n: int, row_block: Optional[int]) -> int:
     return 0 if r <= 0 or r >= n else r
 
 
+def _seg_ops():
+    """The fused-kernel dispatch (lazy: kernels are optional at import
+    time for forms that never take the pallas strategy)."""
+    from repro.kernels.seg_gram import ops as sg_ops
+    return sg_ops
+
+
+def _use_pallas(n: int, row_block: int, strategy: Optional[str]) -> bool:
+    """strategy="pallas" engages on the blocked path (row_block > 0),
+    mirroring the chunked/whole semantics; row_block=0 keeps the legacy
+    whole-array forms byte-for-byte."""
+    return strategy == "pallas" and resolve_row_block(n, row_block) > 0
+
+
 def design(X: Array, *, intercept: bool = False,
            append: Optional[Array] = None) -> Array:
     """Assemble the per-(block-)row design ``[X | 1? | append?]`` in
@@ -112,6 +138,11 @@ def blocked_reduce(block_fn: Callable[..., Any], arrays: Sequence[Array],
     if r == 0:
         return block_fn(*arrays)
     strategy = strategy or "chunked"
+    if strategy == "pallas":
+        # the fallback ladder (pallas → chunked → whole): forms without
+        # a fused seg_gram builder stream chunked — same bits as the
+        # reference the pallas forms are certified against
+        strategy = "chunked"
     pad = (-n) % r
     if pad:
         pv = pad_values or (0,) * len(arrays)
@@ -140,7 +171,7 @@ def blocked_reduce(block_fn: Callable[..., Any], arrays: Sequence[Array],
         return out
     if strategy != "chunked":
         raise ValueError(f"unknown strategy {strategy!r} "
-                         "(expected whole | chunked)")
+                         "(expected whole | chunked | pallas)")
 
     def step(acc, i):
         blks = tuple(
@@ -168,6 +199,10 @@ def weighted_gram(X: Array, w: Array, *, intercept: bool = False,
     """``G = Σ_n w_n d_n d_nᵀ`` over ``d = [X | 1? | append?]`` plus
     ``n_eff = Σ_n w_n`` from the same blocked reduction.  With
     ``append=y``, the cross-moment ``Σ w·d·y`` is ``G[:, -1]``."""
+    if _use_pallas(X.shape[0], row_block, strategy):
+        D = design(X, intercept=intercept, append=append)
+        G = _seg_ops().design_gram(D, w=w, row_block=row_block)
+        return G, w.astype(jnp.float32).sum()
     if append is None:
         def block(Xb, wb):
             D = design(Xb, intercept=intercept)
@@ -244,6 +279,11 @@ def fold_gram(X: Array, folds: Array, k: int, *, intercept: bool = False,
     """One-pass fold-segmented Gram: ``Gh[k] = Σ_{n in fold k} d_n d_nᵀ``
     (k, q, q) plus per-fold row counts (k,).  Integer fold ids are
     padded with -1 so padded rows one-hot to the zero row."""
+    if _use_pallas(X.shape[0], row_block, strategy):
+        D = design(X, intercept=intercept, append=append)
+        return _seg_ops().fold_design_gram(D, folds, k,
+                                           row_block=row_block)
+
     def block(Xb, fb, *rest):
         D = design(Xb, intercept=intercept,
                    append=rest[0] if rest else None)
@@ -307,6 +347,8 @@ def residual_moments(y: Array, t: Array, my: Array, mt: Array, phi: Array,
     r = resolve_row_block(n, row_block)
     if r == 0:
         return rg_ops.residual_gram(y, t, my, mt, phi, backend=backend)
+    if strategy == "pallas":
+        return _seg_ops().residual_gram(y, t, my, mt, phi, row_block=r)
     if backend in ("pallas", "interpret"):
         def block(yb, tb, myb, mtb, phib):
             return rg_ops.residual_gram(yb, tb, myb, mtb, phib,
@@ -335,6 +377,9 @@ def residual_weighted_gram(ry: Array, rt: Array, phi: Array, w: Array,
     Z is formed per block: on the blocked path the dense (n, p) moment
     matrix never materializes."""
     f32 = jnp.float32
+    if _use_pallas(ry.shape[0], row_block, strategy):
+        return _seg_ops().residual_weighted_gram(ry, rt, phi, w,
+                                                 row_block=row_block)
 
     def block(ryb, rtb, phib, wb):
         Z = rtb.astype(f32)[:, None] * phib.astype(f32)
@@ -376,6 +421,9 @@ def residual_meat(y: Array, t: Array, my: Array, mt: Array, phi: Array,
     and chunk-invariant); the contraction takes the width-dispatched
     batch-invariant form (see ``_meat_gram``)."""
     p = phi.shape[1]
+    if _use_pallas(phi.shape[0], row_block, strategy):
+        return _seg_ops().residual_meat(y, t, my, mt, phi, theta, w=w,
+                                        row_block=row_block)
 
     def block(yb, tb, myb, mtb, phib, *rest):
         ry = (yb - myb).astype(jnp.float32)
@@ -414,6 +462,8 @@ def iv_gram(ry: Array, rt: Array, rz: Array, phi: Array, w: Array, *,
     weights — both take the same einsum form, so a w=1 replicate is
     bitwise the point fit."""
     f32 = jnp.float32
+    if _use_pallas(phi.shape[0], row_block, strategy):
+        return _seg_ops().iv_gram(ry, rt, rz, phi, w, row_block=row_block)
 
     def block(ryb, rtb, rzb, phib, wb):
         ph = phib.astype(f32)
@@ -447,6 +497,9 @@ def iv_meat(ry: Array, rt: Array, rz: Array, phi: Array, theta: Array,
     width-dispatched batch-invariant form, matching ``residual_meat``."""
     f32 = jnp.float32
     p = phi.shape[1]
+    if _use_pallas(phi.shape[0], row_block, strategy):
+        return _seg_ops().iv_meat(ry, rt, rz, phi, theta, w=w,
+                                  row_block=row_block)
 
     def block(ryb, rtb, rzb, phib, *rest):
         ph = phib.astype(f32)
@@ -481,6 +534,9 @@ def fold_iv_gram(ry: Array, rt: Array, rz: Array, phi: Array,
     ``G_(-j) = Σ_j Gh - Gh[j]``).  Padded fold ids are -1 so they
     one-hot to the zero row."""
     f32 = jnp.float32
+    if _use_pallas(phi.shape[0], row_block, strategy):
+        return _seg_ops().fold_iv_gram(ry, rt, rz, phi, folds, k,
+                                       row_block=row_block)
 
     def block(ryb, rtb, rzb, phib, fb):
         ph = phib.astype(f32)

@@ -1,73 +1,48 @@
-"""Pallas TPU kernel: fused residualize -> Gram accumulation.
+"""Fused residualize -> Gram for the DML final stage — now a thin
+wrapper over the unified segment-Gram kernel (repro.kernels.seg_gram),
+which generalizes this form to fold/IV/segment-masked Grams.  One
+fused implementation; this module keeps the historical entry point.
 
-The DML final stage at industrial scale (paper §5.3: n = 1M rows,
-p ≈ 500 covariate features) is bandwidth-bound: the naive path writes the
-residual vectors and the (n,p) Z matrix back to HBM before the Gram
-matmul reads them again.  This kernel streams (block_n, p) tiles of phi
-through VMEM once, forms residuals and Z in registers, and accumulates
-G += Z^T Z and b += Z^T ry into VMEM-resident accumulators — a single
-HBM pass over the data.
+The augmented Gram M = [rt*phi | ry] comes out of one rolled pass over
+(block_n, p) tiles (residuals and Z form in registers, accumulators
+stay VMEM-resident); (G, b) are slices of it.
 
-Grid: (n / block_n,) — sequential; outputs use a constant block index so
-they stay pinned in VMEM across iterations (accumulation pattern).
+Padding contract (no divisibility requirement): the row tail is
+zero-padded inside the kernel wrapper — all-zero rows produce all-zero
+M rows, contributing exactly 0.0 to G and b (tested bitwise in
+tests/test_kernels_seg_gram.py).
 
-VMEM working set (fp32): phi tile block_n*p + G p*p + ~3*block_n.
-block_n=512, p=512: 512*512*4 * 2 = 2 MiB << 16 MiB.  p is rounded to a
-multiple of 128 by the wrapper (zero-padded features are exact no-ops in
-G and b).
+``interpret=None`` auto-detects the platform: compiled mosaic on TPU,
+interpret mode elsewhere.
 """
+
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from repro.kernels.seg_gram import kernel as sg_kernel
+from repro.kernels.seg_gram import ref as sg_ref
 
 
-def _rg_kernel(y_ref, t_ref, my_ref, mt_ref, phi_ref, g_ref, b_ref):
-    i = pl.program_id(0)
-
-    @pl.when(i == 0)
-    def _init():
-        g_ref[...] = jnp.zeros_like(g_ref)
-        b_ref[...] = jnp.zeros_like(b_ref)
-
-    ry = (y_ref[...] - my_ref[...]).astype(jnp.float32)  # (bn, 1)
-    rt = (t_ref[...] - mt_ref[...]).astype(jnp.float32)  # (bn, 1)
-    z = rt * phi_ref[...].astype(jnp.float32)            # (bn, p)
-    g_ref[...] += z.T @ z
-    b_ref[...] += z.T @ ry
-
-
-def residual_gram_pallas(y: jax.Array, t: jax.Array, my: jax.Array,
-                         mt: jax.Array, phi: jax.Array, *,
-                         block_n: int = 512, interpret: bool = True
-                         ) -> Tuple[jax.Array, jax.Array]:
+def residual_gram_pallas(
+    y: jax.Array,
+    t: jax.Array,
+    my: jax.Array,
+    mt: jax.Array,
+    phi: jax.Array,
+    *,
+    block_n: int = 512,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
     """y,t,my,mt: (n,); phi: (n,p). Returns (G (p,p), b (p,)) in fp32."""
-    n, p = phi.shape
-    block_n = min(block_n, n)
-    assert n % block_n == 0, (n, block_n)
-
-    col = lambda x: x.reshape(n, 1)
-    g, b = pl.pallas_call(
-        _rg_kernel,
-        grid=(n // block_n,),
-        in_specs=[
-            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((p, p), lambda i: (0, 0)),
-            pl.BlockSpec((p, 1), lambda i: (0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((p, p), jnp.float32),
-            jax.ShapeDtypeStruct((p, 1), jnp.float32),
-        ],
+    p = phi.shape[1]
+    col = lambda x: x.astype(jax.numpy.float32).reshape(-1, 1)  # noqa: E731
+    gaug = sg_kernel.seg_gram_pallas(
+        sg_ref.build_residual,
+        [col(y), col(t), col(my), col(mt), phi.astype(jax.numpy.float32)],
+        block_n=block_n,
         interpret=interpret,
-    )(col(y), col(t), col(my), col(mt), phi)
-    return g, b[:, 0]
+    )
+    return gaug[:p, :p], gaug[:p, p]

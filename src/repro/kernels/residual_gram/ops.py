@@ -2,15 +2,18 @@
 
 Used by repro.core.final_stage: local (per-shard) moments are computed
 here, then psum'd over the data axis — the distributed normal equations
-of the DML final stage.
+of the DML final stage.  The kernel path routes through the unified
+segment-Gram kernel (repro.kernels.seg_gram), whose wrapper zero-pads
+the row tail (exact no-op) — no n % block_n divisibility requirement —
+and auto-detects interpret mode off-TPU.
 """
+
 from __future__ import annotations
 
 import functools
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.residual_gram import kernel as _kernel
 from repro.kernels.residual_gram import ref as _ref
@@ -21,26 +24,26 @@ def default_backend() -> str:
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "block_n"))
-def residual_gram(y: jax.Array, t: jax.Array, my: jax.Array, mt: jax.Array,
-                  phi: jax.Array, *, backend: str = "", block_n: int = 512
-                  ) -> Tuple[jax.Array, jax.Array]:
+def residual_gram(
+    y: jax.Array,
+    t: jax.Array,
+    my: jax.Array,
+    mt: jax.Array,
+    phi: jax.Array,
+    *,
+    backend: str = "",
+    block_n: int = 512,
+) -> Tuple[jax.Array, jax.Array]:
     """Fused residualize->moments. Returns (G (p,p), b (p,)), fp32."""
     be = backend or default_backend()
     if be == "ref":
         return _ref.residual_gram_ref(y, t, my, mt, phi)
-    n, p = phi.shape
-    bn = min(block_n, n)
-    pad_n = (-n) % bn
-    pad_p = (-p) % 128 if be == "pallas" else 0
-    if pad_n or pad_p:
-        # zero rows/cols contribute exactly zero to G and b
-        y = jnp.pad(y, (0, pad_n))
-        t = jnp.pad(t, (0, pad_n))
-        my = jnp.pad(my, (0, pad_n))
-        mt = jnp.pad(mt, (0, pad_n))
-        phi = jnp.pad(phi, ((0, pad_n), (0, pad_p)))
-    g, b = _kernel.residual_gram_pallas(
-        y, t, my, mt, phi, block_n=bn, interpret=(be == "interpret"))
-    if pad_p:
-        g, b = g[:p, :p], b[:p]
-    return g, b
+    return _kernel.residual_gram_pallas(
+        y,
+        t,
+        my,
+        mt,
+        phi,
+        block_n=block_n,
+        interpret=True if be == "interpret" else None,
+    )

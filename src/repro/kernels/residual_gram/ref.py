@@ -11,6 +11,7 @@ CATE features phi:
 theta = G^{-1} b  solves  min_theta  sum_i (ry_i - <theta, phi_i> rt_i)^2,
 whose FOC is the orthogonal moment  E[(ry - theta(x) rt) rt phi(x)] = 0.
 """
+
 from __future__ import annotations
 
 from typing import Tuple
@@ -19,9 +20,9 @@ import jax
 import jax.numpy as jnp
 
 
-def residual_gram_ref(y: jax.Array, t: jax.Array, my: jax.Array,
-                      mt: jax.Array, phi: jax.Array
-                      ) -> Tuple[jax.Array, jax.Array]:
+def residual_gram_ref(
+    y: jax.Array, t: jax.Array, my: jax.Array, mt: jax.Array, phi: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
     ry = (y - my).astype(jnp.float32)
     rt = (t - mt).astype(jnp.float32)
     z = rt[:, None] * phi.astype(jnp.float32)

@@ -1,0 +1,4 @@
+# Fused masked/segmented augmented-Gram kernel family: ONE Pallas
+# kernel (kernel.py) + an XLA scatter lowering (ops.py) + the one-hot
+# einsum oracle (ref.py) behind row_block_strategy="pallas".
+from repro.kernels.seg_gram import ops  # noqa: F401

@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: ONE fused mask -> weight -> residualize -> Gram
+pass for every segment-Gram-shaped moment in the repo.
+
+The estimators bottom out in ``G[s] = sum_{seg_n = s} w_n L_n (x) R_n``
+(repro.kernels.seg_gram.ref documents the builder vocabulary).  The
+naive paths write residuals, the (n, p) moment matrix, and an (n, S)
+one-hot mask back to HBM between elementwise ops and the Gram matmul;
+this kernel streams (block_n, d) tiles through VMEM once per input,
+runs the builder in registers, applies the segment mask and bootstrap
+weight in registers, and accumulates into a VMEM-resident output:
+
+  grid        (n / block_n,) — sequential; outputs use a constant block
+              index so they stay pinned in VMEM across iterations.
+  S == 1      g (qL, qR):        g += (w * L)^T R      (one MXU matmul)
+  S  > 1      g (S*qL, qR):      the weighted one-hot expands L into
+              T[n, s*qL + i] = oh[n, s] * L[n, i] and g += T^T R — the
+              segmented sum IS the matmul, which is the layout the MXU
+              wants (a 2-D (S*qL, qR) accumulator, not (S, qL, qR)).
+
+VMEM working set (fp32): input tiles ~ block_n * sum(d_i), T tile
+block_n * S*qL, accumulator S*qL * qR.  block_n=512, S*qL=768, qR=128:
+512*768*4 + 768*128*4 ~ 1.9 MiB << 16 MiB.
+
+Padding contract: the row tail is zero-padded to a multiple of block_n
+with seg = -1 (matches no lane of the iota compare -> zero mask row)
+and w = 0; builders map all-zero rows to all-zero L/R rows, so padded
+rows contribute exactly 0.0 to every accumulator.  On the mosaic path
+L/R columns are zero-padded in registers to the (8, 128) fp32 tile
+(sliced off the output) — interpret mode skips the column padding.
+
+``interpret=None`` auto-detects: compiled mosaic on TPU, interpret
+elsewhere (the CPU certification mode the tests pin).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _pad_rows(a: Array, pad: int, value) -> Array:
+    return jnp.pad(a, ((0, pad), (0, 0)), constant_values=value)
+
+
+def _pad_cols(a: Array, pad: int) -> Array:
+    if pad == 0:
+        return a
+    return jnp.concatenate([a, jnp.zeros((a.shape[0], pad), a.dtype)], axis=1)
+
+
+def seg_gram_pallas(
+    builder,
+    arrays: Sequence[Array],
+    *,
+    seg: Optional[Array] = None,
+    w: Optional[Array] = None,
+    n_segments: int = 1,
+    block_n: int = 512,
+    interpret: Optional[bool] = None,
+) -> Array:
+    """Fused segmented Gram.  ``arrays``: 2-D fp32 inputs, row-shaped
+    (n, d) or broadcast (1, d); ``seg``: (n, 1) int32 ids in
+    [0, n_segments); ``w``: (n, 1) row weights (default ones).  Returns
+    (qL, qR) when n_segments == 1, else (n_segments, qL, qR), fp32."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    S = int(n_segments)
+    rows = [a for a in arrays if a.shape[0] != 1]
+    n = rows[0].shape[0]
+    bn = min(int(block_n), n)
+    qL, qR = jax.eval_shape(
+        builder,
+        *[
+            jax.ShapeDtypeStruct(
+                (a.shape[0] if a.shape[0] == 1 else bn,) + a.shape[1:],
+                a.dtype,
+            )
+            for a in arrays
+        ],
+    )
+    qL, qR = qL.shape[1], qR.shape[1]
+    # mosaic wants (sublane, lane) = (8, 128) fp32 output tiles; padded
+    # columns are exact zeros and are sliced off below
+    pad_l = 0 if interpret else (-qL) % 8
+    pad_r = 0 if interpret else (-qR) % 128
+    qlp, qrp = qL + pad_l, qR + pad_r
+
+    pad = (-n) % bn
+    if w is None:
+        w = jnp.ones((n, 1), jnp.float32)
+    if pad:
+        arrays = [a if a.shape[0] == 1 else _pad_rows(a, pad, 0) for a in arrays]
+        w = _pad_rows(w, pad, 0)
+        if seg is not None:
+            seg = _pad_rows(seg, pad, -1)
+    nb = (n + pad) // bn
+
+    def _spec(a: Array) -> pl.BlockSpec:
+        if a.shape[0] == 1:
+            return pl.BlockSpec((1, a.shape[1]), lambda i: (0, 0))
+        return pl.BlockSpec((bn, a.shape[1]), lambda i: (i, 0))
+
+    inputs = list(arrays) + ([seg] if S > 1 else []) + [w]
+
+    def kern(*refs):
+        *data_refs, w_ref, g_ref = refs
+        if S > 1:
+            *data_refs, seg_ref = data_refs
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            g_ref[...] = jnp.zeros_like(g_ref)
+
+        L, R = builder(*[r[...] for r in data_refs])
+        L = _pad_cols(L, pad_l)
+        R = _pad_cols(R, pad_r)
+        wb = w_ref[...]  # (bn, 1)
+        if S == 1:
+            g_ref[...] += (L * wb).T @ R
+        else:
+            ids = seg_ref[...]  # (bn, 1) int32
+            iota = lax.broadcasted_iota(jnp.int32, (ids.shape[0], S), 1)
+            oh = jnp.where(ids == iota, wb, 0.0)  # (bn, S)
+            T = (oh[:, :, None] * L[:, None, :]).reshape(ids.shape[0], S * qlp)
+            g_ref[...] += T.T @ R
+
+    out_rows = qlp if S == 1 else S * qlp
+    g = pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[_spec(a) for a in inputs],
+        out_specs=pl.BlockSpec((out_rows, qrp), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((out_rows, qrp), jnp.float32),
+        interpret=interpret,
+    )(*inputs)
+    if S == 1:
+        return g[:qL, :qR]
+    return g.reshape(S, qlp, qrp)[:, :qL, :qR]

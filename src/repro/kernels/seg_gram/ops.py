@@ -1,0 +1,369 @@
+"""Dispatch wrapper for the fused segment-Gram kernel family.
+
+``repro.core.moments`` routes ``row_block_strategy="pallas"`` here.
+Three lowerings of the same builder vocabulary (ref.py):
+
+  "pallas"    the Pallas kernel (kernel.py): compiled mosaic on TPU,
+              interpret mode elsewhere — ONE fused HBM pass.
+  "interpret" the Pallas kernel forced into interpret mode — the CPU
+              certification target (same block decomposition and
+              accumulation order as the compiled kernel).
+  "scatter"   pure-XLA fast lowering for hosts without a mosaic
+              compiler: one segment is the fused augmented matmul
+              ``(w*L)^T R``; many segments scatter per-row outer
+              products with ``jax.ops.segment_sum`` — measured ~2x
+              over the one-hot einsum at sweep shapes on CPU, because
+              the (n, S) mask never materializes.
+  "ref"       the one-hot einsum oracle (ref.py).
+
+``default_backend()`` picks "pallas" on TPU and "scatter" elsewhere;
+``force_backend("interpret")`` pins the kernel path for parity tests
+(the conformance suite certifies chunked = pallas estimator-wide).
+
+Contract: all lowerings share the padding rules of the moments engine
+(zero data rows, seg = -1 — ``segment_sum`` drops negative ids exactly
+as the one-hot maps them to a zero row — and w = 0), so padded rows
+are exact no-ops.  Counts/n_eff are computed OUTSIDE the kernels from
+the same plain sums in every mode (the ``fold_weighted_gram``
+precedent: strategy-independent by construction).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.seg_gram import kernel as _kernel
+from repro.kernels.seg_gram import ref as _ref
+
+Array = jax.Array
+_F32 = jnp.float32
+
+_FORCED: List[str] = []
+
+
+def default_backend() -> str:
+    if _FORCED:
+        return _FORCED[-1]
+    return "pallas" if jax.default_backend() == "tpu" else "scatter"
+
+
+@contextlib.contextmanager
+def force_backend(name: str):
+    """Pin the lowering for the dynamic extent (tests: "interpret"
+    certifies the kernel path on CPU, "ref" the einsum oracle)."""
+    _FORCED.append(name)
+    try:
+        yield
+    finally:
+        _FORCED.pop()
+
+
+def _col(x: Array) -> Array:
+    x = x.astype(_F32)
+    return x[:, None] if x.ndim == 1 else x
+
+
+def _scatter(builder, arrays, seg, w, n_segments, row_block) -> Array:
+    n = max(a.shape[0] for a in arrays)
+    if n_segments == 1:
+        L, R = builder(*arrays)
+        Lw = L if w is None else L * w
+        return Lw.T @ R
+    sids = seg[:, 0]
+    r = int(row_block or 0)
+    if r <= 0 or r >= n:
+        L, R = builder(*arrays)
+        Lw = L if w is None else L * w
+        outer = (Lw[:, :, None] * R[:, None, :]).reshape(n, -1)
+        G = jax.ops.segment_sum(outer, sids, num_segments=n_segments)
+        return G.reshape(n_segments, L.shape[1], R.shape[1])
+    # blocked scan: bounded O(r * qL*qR) temporaries at industrial n
+    pad = (-n) % r
+    if pad:
+        arrays = [
+            a if a.shape[0] == 1 else jnp.pad(a, ((0, pad), (0, 0)))
+            for a in arrays
+        ]
+        sids = jnp.pad(sids, (0, pad), constant_values=-1)
+        if w is not None:
+            w = jnp.pad(w, ((0, pad), (0, 0)))
+    nb = (n + pad) // r
+
+    def _slc(a, i):
+        if a.shape[0] == 1:
+            return a
+        return lax.dynamic_slice_in_dim(a, i * r, r, axis=0)
+
+    qL, qR = jax.eval_shape(
+        builder,
+        *[
+            jax.ShapeDtypeStruct(
+                (a.shape[0] if a.shape[0] == 1 else r,) + a.shape[1:],
+                a.dtype,
+            )
+            for a in arrays
+        ],
+    )
+    qL, qR = qL.shape[1], qR.shape[1]
+
+    def step(acc, i):
+        L, R = builder(*[_slc(a, i) for a in arrays])
+        Lw = L if w is None else L * _slc(w, i)
+        outer = (Lw[:, :, None] * R[:, None, :]).reshape(r, qL * qR)
+        sb = lax.dynamic_slice_in_dim(sids, i * r, r, axis=0)
+        return (
+            acc + jax.ops.segment_sum(outer, sb, num_segments=n_segments),
+            None,
+        )
+
+    acc0 = jnp.zeros((n_segments, qL * qR), _F32)
+    G, _ = lax.scan(step, acc0, jnp.arange(nb, dtype=jnp.int32))
+    return G.reshape(n_segments, qL, qR)
+
+
+def seg_reduce(
+    builder,
+    arrays: Sequence[Array],
+    *,
+    seg: Optional[Array] = None,
+    w: Optional[Array] = None,
+    n_segments: int = 1,
+    row_block: int = 0,
+    backend: str = "",
+) -> Array:
+    """The one entry point: dispatch ``G[s] = sum w_n L_n (x) R_n`` to
+    the selected lowering.  ``row_block`` sets the kernel block size
+    (and bounds the scatter lowering's temporaries)."""
+    be = backend or default_backend()
+    arrays = [a.astype(_F32) for a in arrays]
+    if w is not None:
+        w = _col(w)
+    if seg is not None:
+        seg = seg.astype(jnp.int32)
+        seg = seg[:, None] if seg.ndim == 1 else seg
+    if be == "ref":
+        return _ref.seg_gram_ref(
+            builder, arrays, seg=seg, w=w, n_segments=n_segments
+        )
+    if be == "scatter":
+        return _scatter(builder, arrays, seg, w, n_segments, row_block)
+    if be not in ("pallas", "interpret"):
+        raise ValueError(f"unknown seg_gram backend {be!r}")
+    interpret = True if be == "interpret" else None
+    bn = row_block if 0 < row_block else 512
+    return _kernel.seg_gram_pallas(
+        builder,
+        arrays,
+        seg=seg,
+        w=w,
+        n_segments=n_segments,
+        block_n=bn,
+        interpret=interpret,
+    )
+
+
+def segment_counts(
+    seg: Array, n_segments: int, *, w: Optional[Array] = None
+) -> Array:
+    """Per-segment row counts (or weight sums) — a plain O(n) sum,
+    computed identically in every backend so counts stay
+    strategy-independent (exact integers match the one-hot column
+    sums of the chunked reference bitwise)."""
+    ones = jnp.ones((seg.shape[0],), _F32) if w is None else w.astype(_F32)
+    return jax.ops.segment_sum(
+        ones, seg.astype(jnp.int32), num_segments=n_segments
+    )
+
+
+# ---------------------------------------------------------------------------
+# Moment-form API mirroring repro.core.moments (the strategy="pallas"
+# targets).  All return fp32; n_eff/counts ride alongside like the
+# moments signatures they replace.
+# ---------------------------------------------------------------------------
+
+
+def design_gram(
+    D: Array, *, w: Optional[Array] = None, row_block: int = 0, backend: str = ""
+) -> Array:
+    """(q, q) weighted Gram over a pre-assembled design."""
+    return seg_reduce(
+        _ref.build_design, [D], w=w, row_block=row_block, backend=backend
+    )
+
+
+def fold_design_gram(
+    D: Array,
+    folds: Array,
+    k: int,
+    *,
+    row_block: int = 0,
+    backend: str = "",
+) -> Tuple[Array, Array]:
+    """(k, q, q) fold-segmented Gram + per-fold counts."""
+    G = seg_reduce(
+        _ref.build_design,
+        [D],
+        seg=folds,
+        n_segments=k,
+        row_block=row_block,
+        backend=backend,
+    )
+    return G, segment_counts(folds, k)
+
+
+def residual_gram(
+    y: Array,
+    t: Array,
+    my: Array,
+    mt: Array,
+    phi: Array,
+    *,
+    w: Optional[Array] = None,
+    row_block: int = 0,
+    backend: str = "",
+) -> Tuple[Array, Array]:
+    """(G (p, p), b (p,)) of the orthogonal moment, read off the fused
+    augmented Gram M = [rt*phi | ry]."""
+    p = phi.shape[1]
+    Gaug = seg_reduce(
+        _ref.build_residual,
+        [_col(y), _col(t), _col(my), _col(mt), phi],
+        w=w,
+        row_block=row_block,
+        backend=backend,
+    )
+    return Gaug[:p, :p], Gaug[:p, p]
+
+
+def residual_weighted_gram(
+    ry: Array,
+    rt: Array,
+    phi: Array,
+    w: Array,
+    *,
+    row_block: int = 0,
+    backend: str = "",
+) -> Tuple[Array, Array]:
+    """Weighted augmented residual Gram (inference.numerics form)."""
+    Gaug = seg_reduce(
+        _ref.build_residual_direct,
+        [_col(ry), _col(rt), phi],
+        w=w,
+        row_block=row_block,
+        backend=backend,
+    )
+    return Gaug, w.astype(_F32).sum()
+
+
+def iv_gram(
+    ry: Array,
+    rt: Array,
+    rz: Array,
+    phi: Array,
+    w: Array,
+    *,
+    row_block: int = 0,
+    backend: str = "",
+) -> Tuple[Array, Array]:
+    """((2p+1, 2p+1) instrumented augmented Gram, n_eff)."""
+    Gaug = seg_reduce(
+        _ref.build_iv,
+        [_col(ry), _col(rt), _col(rz), phi],
+        w=w,
+        row_block=row_block,
+        backend=backend,
+    )
+    return Gaug, w.astype(_F32).sum()
+
+
+def fold_iv_gram(
+    ry: Array,
+    rt: Array,
+    rz: Array,
+    phi: Array,
+    folds: Array,
+    k: int,
+    *,
+    row_block: int = 0,
+    backend: str = "",
+) -> Tuple[Array, Array]:
+    """((k, 2p+1, 2p+1) fold-segmented instrumented Gram, counts)."""
+    G = seg_reduce(
+        _ref.build_iv,
+        [_col(ry), _col(rt), _col(rz), phi],
+        seg=folds,
+        n_segments=k,
+        row_block=row_block,
+        backend=backend,
+    )
+    return G, segment_counts(folds, k)
+
+
+def residual_meat(
+    y: Array,
+    t: Array,
+    my: Array,
+    mt: Array,
+    phi: Array,
+    theta: Array,
+    *,
+    w: Optional[Array] = None,
+    row_block: int = 0,
+    backend: str = "",
+) -> Array:
+    """(p, p) HC0 meat at theta; the (w*e)^2 weighting happens inside
+    the builder (w scales e BEFORE squaring, matching moments)."""
+    arrays = [_col(y), _col(t), _col(my), _col(mt), phi, theta.reshape(1, -1)]
+    if w is not None:
+        arrays.append(_col(w))
+    return seg_reduce(
+        _ref.build_residual_meat, arrays, row_block=row_block, backend=backend
+    )
+
+
+def iv_meat(
+    ry: Array,
+    rt: Array,
+    rz: Array,
+    phi: Array,
+    theta: Array,
+    *,
+    w: Optional[Array] = None,
+    row_block: int = 0,
+    backend: str = "",
+) -> Array:
+    """(p, p) HC0 meat of the instrumented moment at theta."""
+    arrays = [_col(ry), _col(rt), _col(rz), phi, theta.reshape(1, -1)]
+    if w is not None:
+        arrays.append(_col(w))
+    return seg_reduce(
+        _ref.build_iv_meat, arrays, row_block=row_block, backend=backend
+    )
+
+
+def segment_outer(
+    U: Array,
+    V: Array,
+    seg: Array,
+    n_segments: int,
+    *,
+    w: Optional[Array] = None,
+    row_block: int = 0,
+    backend: str = "",
+) -> Array:
+    """(S, qU, qV) segmented outer-product sums — the sweep's per-step
+    gradient shape (one-hot einsum 'ns,ni,nj->sij', fused)."""
+    return seg_reduce(
+        _ref.build_pair,
+        [_col(U), _col(V)],
+        seg=seg,
+        w=w,
+        n_segments=n_segments,
+        row_block=row_block,
+        backend=backend,
+    )

@@ -1,0 +1,118 @@
+"""Builders + pure-jnp oracle for the fused segment-Gram family.
+
+Every moment form in ``repro.core.moments`` is an instance of ONE shape:
+
+    G[s] = sum_{n: seg_n = s}  w_n * L_n (x) R_n
+
+where the per-row factors (L, R) are assembled from raw inputs by a
+*builder* — residualize, multiply by phi, append the target column —
+and ``seg`` is a segment/fold id (one segment means a plain Gram).  The
+builders below are plain jnp functions over 2-D fp32 blocks, so the
+SAME builder body is traced inside the Pallas kernel (registers), the
+XLA scatter lowering, and this one-hot einsum oracle: the three
+backends differ only in how the segmented sum is realized.
+
+Builder contract: inputs are 2-D arrays — row-shaped ``(rows, d)`` or
+broadcast ``(1, d)`` (e.g. theta) — and the output pair (L, R) is
+row-linear in the data, with all-zero input rows mapping to all-zero
+L/R rows (that is what makes zero-padding the row tail an exact no-op
+in every accumulator).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Pair = Tuple[Array, Array]
+
+
+def build_pair(U: Array, V: Array) -> Pair:
+    """Plain segmented outer product: L = U, R = V."""
+    return U, V
+
+
+def build_design(D: Array) -> Pair:
+    """Symmetric Gram over a pre-assembled design ``[X | 1? | y?]``."""
+    return D, D
+
+
+def build_residual(y: Array, t: Array, my: Array, mt: Array, phi: Array) -> Pair:
+    """DML final stage: M = [(t - mt) * phi | (y - my)], G = M^T M."""
+    ry = y - my
+    rt = t - mt
+    M = jnp.concatenate([rt * phi, ry], axis=1)
+    return M, M
+
+
+def build_residual_direct(ry: Array, rt: Array, phi: Array) -> Pair:
+    """Residuals already formed (inference.numerics): M = [rt*phi | ry]."""
+    M = jnp.concatenate([rt * phi, ry], axis=1)
+    return M, M
+
+
+def build_iv(ry: Array, rt: Array, rz: Array, phi: Array) -> Pair:
+    """Instrumented augmented Gram: M = [rz*phi | rt*phi | ry]."""
+    M = jnp.concatenate([rz * phi, rt * phi, ry], axis=1)
+    return M, M
+
+
+def build_residual_meat(
+    y: Array,
+    t: Array,
+    my: Array,
+    mt: Array,
+    phi: Array,
+    theta: Array,
+    w: Optional[Array] = None,
+) -> Pair:
+    """HC0 meat of the orthogonal moment: m = (w *) e * z with
+    z = rt*phi, e = ry - <z, theta> (theta rides as a (1, p) broadcast
+    row so the residual forms in registers alongside z)."""
+    ry = y - my
+    rt = t - mt
+    z = rt * phi
+    e = ry - jnp.sum(z * theta, axis=1, keepdims=True)
+    if w is not None:
+        e = w * e
+    m = e * z
+    return m, m
+
+
+def build_iv_meat(
+    ry: Array,
+    rt: Array,
+    rz: Array,
+    phi: Array,
+    theta: Array,
+    w: Optional[Array] = None,
+) -> Pair:
+    """HC0 meat of the instrumented moment: score zc = rz*phi, residual
+    e = ry - <rt*phi, theta>."""
+    z = rt * phi
+    e = ry - jnp.sum(z * theta, axis=1, keepdims=True)
+    if w is not None:
+        e = w * e
+    m = e * (rz * phi)
+    return m, m
+
+
+def seg_gram_ref(
+    builder,
+    arrays,
+    *,
+    seg: Optional[Array] = None,
+    w: Optional[Array] = None,
+    n_segments: int = 1,
+) -> Array:
+    """One-hot einsum oracle (whole-array, no blocking): the reference
+    the kernel and scatter lowerings are tested against."""
+    L, R = builder(*arrays)
+    Lw = L if w is None else L * w
+    if n_segments == 1:
+        return jnp.einsum("ni,nj->ij", Lw, R)
+    oh = jax.nn.one_hot(seg[:, 0], n_segments, dtype=L.dtype)
+    return jnp.einsum("ns,ni,nj->sij", oh, Lw, R)

@@ -20,7 +20,11 @@ per-segment one-hot Grams over the residuals.
 
 Everything streams through ``core.moments`` (``fold_gram`` honors
 ``cfg.row_block``), so no per-segment data copy and no (E, n) weight
-tensor ever materializes.  This is the "software that estimates many
+tensor ever materializes.  ``cfg.row_block_strategy="pallas"`` swaps
+the one-hot einsums (the fold Grams, the MM gradient terms, the
+per-segment final stage) for the fused segment-Gram kernels of
+``repro.kernels.seg_gram`` — the (n, E·k) masks never materialize at
+all, which is the measured CPU/TPU win on the MM hot loop.  This is the "software that estimates many
 effects cheaply" execution (Wong 2020): benchmarks/bench_sweep.py
 measures ~10x over the serial loop at E=64 on CPU.
 
@@ -106,37 +110,68 @@ def _segment_fold_logistic(
     H0 = (GsegX[:, None] - GhX) / (4.0 * n_eff[..., None, None]) + lam * jnp.eye(
         q, dtype=_F32
     )
-    oh_seg = jax.nn.one_hot(sids, n_segments, dtype=_F32)  # (n, E)
-    oh_comb = jax.nn.one_hot(comb, n_segments * k, dtype=_F32)  # (n, E·k)
+    if strategy == "pallas":
+        # the fused segment-outer kernels replace the one-hot einsums:
+        # neither the (n, E) nor the (n, E·k) mask ever materializes.
+        # In-loop calls run whole-array (row_block=0): the transient
+        # (n, k·q) outer is SMALLER than the (n, E·k) one-hot it
+        # replaces, and the MM loop is the measured sweep hot spot.
+        from repro.kernels.seg_gram import ops as sg_ops
+
+        def grad_terms(r, rr):
+            t1 = sg_ops.segment_outer(r, Xa, sids, n_segments)
+            t2 = sg_ops.segment_outer(rr[:, None], Xa, comb, n_segments * k)
+            return t1, t2.reshape(n_segments, k, q)
+
+    else:
+        oh_seg = jax.nn.one_hot(sids, n_segments, dtype=_F32)  # (n, E)
+        oh_comb = jax.nn.one_hot(comb, n_segments * k, dtype=_F32)  # (n, E·k)
+
+        def grad_terms(r, rr):
+            t1 = jnp.einsum("ns,nk,np->skp", oh_seg, r, Xa)
+            t2 = jnp.einsum("nc,n,np->cp", oh_comb, rr, Xa)
+            return t1, t2.reshape(n_segments, k, q)
 
     def step(_, beta):  # beta: (E, k, q)
         bs = beta[sids]  # (n, k, q)
         mu = jax.nn.sigmoid(jnp.einsum("np,nkp->nk", Xa, bs))
         r = mu - tt[:, None]  # (n, k)
         # held-in sums per segment minus own-fold sums = complement
-        t1 = jnp.einsum("ns,nk,np->skp", oh_seg, r, Xa)
         rr = jnp.take_along_axis(r, folds[:, None], axis=1)[:, 0]
-        t2 = jnp.einsum("nc,n,np->cp", oh_comb, rr, Xa).reshape(n_segments, k, q)
+        t1, t2 = grad_terms(r, rr)
         g = (t1 - t2) / n_eff[..., None] + lam * beta
         return beta - jax.vmap(jax.vmap(det_solve))(H0, g)
 
     return jax.lax.fori_loop(0, iters, step, jnp.zeros((n_segments, k, q), _F32))
 
 
-def _segment_final_stage(ry, rt, phi, sids, n_segments, ridge=1e-8):
+def _segment_final_stage(
+    ry, rt, phi, sids, n_segments, ridge=1e-8, row_block=0, strategy=None
+):
     """Per-segment orthogonal final stage + HC0 sandwich, all E
-    segments from one-hot Grams over the residuals (one data pass)."""
+    segments from segment-Grams over the residuals (one data pass:
+    one-hot einsums by default, the fused seg_gram kernels under
+    strategy="pallas")."""
     pf = phi.shape[1]
     z = rt[:, None] * phi
     m = jnp.concatenate([z, ry[:, None]], axis=1)
-    oh_seg = jax.nn.one_hot(sids, n_segments, dtype=_F32)
-    gaug = jnp.einsum("ns,ni,nj->sij", oh_seg, m, m)  # (E, pf+1, pf+1)
-    nseg = jnp.maximum(oh_seg.sum(0), 1.0)
+    if strategy == "pallas":
+        from repro.kernels.seg_gram import ops as sg_ops
+
+        gaug = sg_ops.segment_outer(m, m, sids, n_segments, row_block=row_block)
+        nseg = jnp.maximum(sg_ops.segment_counts(sids, n_segments), 1.0)
+    else:
+        oh_seg = jax.nn.one_hot(sids, n_segments, dtype=_F32)
+        gaug = jnp.einsum("ns,ni,nj->sij", oh_seg, m, m)  # (E, pf+1, pf+1)
+        nseg = jnp.maximum(oh_seg.sum(0), 1.0)
     a = gaug[:, :pf, :pf] + ridge * nseg[:, None, None] * jnp.eye(pf, dtype=_F32)
     theta = jax.vmap(det_solve)(a, gaug[:, :pf, pf])
     e = ry - (z * theta[sids]).sum(axis=1)
     me = e[:, None] * z
-    meat = jnp.einsum("ns,ni,nj->sij", oh_seg, me, me)
+    if strategy == "pallas":
+        meat = sg_ops.segment_outer(me, me, sids, n_segments, row_block=row_block)
+    else:
+        meat = jnp.einsum("ns,ni,nj->sij", oh_seg, me, me)
     ainv = jax.vmap(det_inv)(a)
     cov = jnp.einsum("sia,sab,sbj->sij", ainv, meat, ainv)
     se = jnp.sqrt(jnp.clip(jnp.diagonal(cov, axis1=1, axis2=2), 0.0, None))
@@ -181,7 +216,9 @@ def segmented_dml_sweep(
     ry = y.astype(_F32) - my
     rt = tt - mt
     phi = cate_basis(X, cfg.cate_features)
-    theta, se = _segment_final_stage(ry, rt, phi, sids, n_segments)
+    theta, se = _segment_final_stage(
+        ry, rt, phi, sids, n_segments, row_block=rb, strategy=st
+    )
     return {"theta": theta, "se": se, "ate": theta[:, 0]}
 
 

@@ -4,6 +4,21 @@ import jax
 import pytest
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    """Release compiled executables between test modules.
+
+    Every XLA executable holds live memory mappings; across the full
+    suite the process otherwise accumulates past the kernel's default
+    ``vm.max_map_count`` (65530) and a late compile segfaults inside
+    XLA.  Cross-module cache hits are rare (each module compiles its
+    own shapes), so this costs little and bounds the map count.  The
+    bit-identity contracts are all certified within one module, never
+    across a cache clear."""
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture
 def key():
     return jax.random.PRNGKey(0)
