@@ -31,6 +31,7 @@ GATED_PREFIXES = (
     "iv",
     "sweep",
     "kernel_seg_gram",
+    "store",
 )
 
 

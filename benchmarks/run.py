@@ -132,6 +132,15 @@ def main(argv=None):
     else:
         bench_seg_gram.run(csv=rec)
 
+    print("# --- effect store: incremental ingest vs full refit ---")
+    from benchmarks import bench_store
+    if args.full:
+        bench_store.run(n_day=16_384, days=5, p=20, csv=rec)
+    elif args.smoke:
+        bench_store.run(n_day=2048, days=3, csv=rec)
+    else:
+        bench_store.run(csv=rec)
+
     print("# --- observability: traced smoke run + cost audit ---")
     from benchmarks import bench_obs
     if args.smoke:

@@ -1,0 +1,81 @@
+"""Effect-store demo: five days of arriving data, refreshed two ways —
+re-fitting the whole panel from scratch every day (the practitioner's
+baseline) vs folding ONLY the new rows into a persistent MomentStore
+and re-solving from moments.  At these row-blocked shapes the two are
+bitwise identical, day after day.
+
+Run: PYTHONPATH=src python examples/store_demo.py
+"""
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.config import CausalConfig
+from repro.data.causal_dgp import make_causal_data
+from repro.store import MomentStore
+from repro.sweep.spec import SweepSpec
+
+N_DAY, DAYS, P, E = 4096, 5, 10, 8
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    total = N_DAY * DAYS
+    data = make_causal_data(key, total, P, effect=1.0,
+                            discrete_treatment=False)
+    sids = jax.random.randint(jax.random.fold_in(key, 1), (total,), 0, E)
+
+    cfg = CausalConfig(n_folds=3, inference="none", row_block=1024,
+                       nuisance_t="ridge", discrete_treatment=False)
+    spec = SweepSpec(n_segments=E, columns=(("dml", cfg),))
+
+    def day(d):
+        lo, hi = d * N_DAY, (d + 1) * N_DAY
+        return dict(X=data.X[lo:hi], y=data.y[lo:hi], t=data.t[lo:hi],
+                    segment_ids=sids[lo:hi])
+
+    store = MomentStore(spec, n_features=P, key=key)
+    ckpt = CheckpointManager(tempfile.mkdtemp(prefix="store_demo_"))
+
+    print(f"{DAYS} days x {N_DAY} rows/day, {E} segments, "
+          f"row_block={cfg.row_block}\n")
+    print("day   rows_seen  ingest+refresh   full_refit   speedup  bitwise")
+    for d in range(DAYS):
+        # incremental: fold ONLY today's rows into the standing store
+        t0 = time.perf_counter()
+        store.ingest(**day(d))
+        panel = store.refresh()
+        jax.block_until_ready(panel.columns[0].thetas)
+        t_inc = time.perf_counter() - t0
+        store.save(ckpt)  # versioned snapshot (hot-swap/rollback)
+
+        # baseline: rebuild from scratch over ALL rows seen so far
+        t0 = time.perf_counter()
+        refit = MomentStore(spec, n_features=P, key=key)
+        hi = (d + 1) * N_DAY
+        refit.ingest(X=data.X[:hi], y=data.y[:hi], t=data.t[:hi],
+                     segment_ids=sids[:hi])
+        full = refit.refresh()
+        jax.block_until_ready(full.columns[0].thetas)
+        t_full = time.perf_counter() - t0
+
+        same = np.array_equal(np.asarray(panel.columns[0].thetas),
+                              np.asarray(full.columns[0].thetas))
+        print(f"  {d}   {store.n_total:9d}  {t_inc:12.2f}s  "
+              f"{t_full:9.2f}s  {t_full / t_inc:6.2f}x  {same}")
+
+    print(f"\nstore at version {store.version} "
+          f"(checkpoints: {ckpt.latest_step()} latest)")
+    col = store.refresh().columns[0]
+    print("per-segment ATE after day 5:",
+          np.array2string(np.asarray(col.ates), precision=3))
+    print("(full-refit timings include each day's from-scratch jit; the "
+          "standing store compiles once and its ingest cost scales with "
+          "the new block, not the history)")
+
+
+if __name__ == "__main__":
+    main()

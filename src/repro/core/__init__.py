@@ -1,4 +1,17 @@
-# The paper's primary contribution: distributed Double-ML.
+"""repro.core — the estimation substrate: distributed Double-ML.
+
+The paper's primary contribution, translated from Ray task pools to
+batched SPMD programs.  Everything bottoms out in the streaming
+sufficient-statistics engine (``moments``); on top of it sit the
+shared estimator base layer (``estimator``), fold-parallel
+cross-fitting (``crossfit``, paper C1), population-axis tuning
+(``tuning``, C2), the DML / DR / metalearner / orthogonal-IV
+estimator facades, the refutation suite, and the registry
+(``registry``) that tests, benchmarks, ``repro.sweep``, and
+``repro.store`` all consume as the single source of truth.
+Uncertainty quantification lives in ``repro.inference``; segment
+panels in ``repro.sweep``; incremental refresh in ``repro.store``.
+"""
 #   moments.py      streaming sufficient-statistics engine (the single
 #                   estimation substrate: whole-array or row-chunked,
 #                   bit-identical by construction)

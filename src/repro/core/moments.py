@@ -116,7 +116,8 @@ def design(X: Array, *, intercept: bool = False,
 
 def blocked_reduce(block_fn: Callable[..., Any], arrays: Sequence[Array],
                    *, row_block: int = 0, strategy: Optional[str] = None,
-                   rules=None, pad_values: Optional[Sequence] = None) -> Any:
+                   rules=None, pad_values: Optional[Sequence] = None,
+                   init: Optional[Any] = None, form: str = "") -> Any:
     """Reduce ``block_fn`` over row blocks of the leading axis.
 
     ``block_fn(*blocks) -> pytree`` must be row-additive AND must map
@@ -131,17 +132,41 @@ def blocked_reduce(block_fn: Callable[..., Any], arrays: Sequence[Array],
     decomposition is reduced left-to-right either all-at-once
     ("whole") or streamed ("chunked"); see the module docstring for
     the bit-identity contract.
+
+    ``init`` seeds the left-fold accumulator (same pytree structure as
+    ``block_fn``'s output) instead of zeros — the incremental-refresh
+    hook of ``repro.store``: folding new rows on top of a standing
+    accumulator replays the EXACT addition sequence a one-shot pass
+    over the concatenated rows would run, **provided every earlier
+    ingest ended on a ``row_block`` boundary** (otherwise the block
+    decomposition shifts and identity holds only up to float
+    reassociation).  On the ``row_block == 0`` path ``init`` is added
+    to the whole-array result — correct, but only tolerance-equal to a
+    one-shot pass.
+
+    ``form`` labels the moment form for the fallback-ladder counter:
+    when ``strategy="pallas"`` reaches this function (no fused
+    seg_gram builder for the form), the downgrade to "chunked" is
+    counted on ``obs.metrics.default_registry()`` as
+    ``seg_gram.fallback[<form>]`` — a trace-time event (jit-cached
+    calls do not re-count).
     """
     arrays = tuple(arrays)
     n = arrays[0].shape[0]
+    tmap = jax.tree_util.tree_map
     r = resolve_row_block(n, row_block)
     if r == 0:
-        return block_fn(*arrays)
+        out = block_fn(*arrays)
+        return out if init is None else tmap(jnp.add, init, out)
     strategy = strategy or "chunked"
     if strategy == "pallas":
         # the fallback ladder (pallas → chunked → whole): forms without
         # a fused seg_gram builder stream chunked — same bits as the
-        # reference the pallas forms are certified against
+        # reference the pallas forms are certified against.  Counted so
+        # the remaining fusion gap stays observable (ROADMAP item).
+        from repro.obs.metrics import default_registry
+        default_registry().counter(
+            f"seg_gram.fallback[{form or 'unlabeled'}]").inc()
         strategy = "chunked"
     pad = (-n) % r
     if pad:
@@ -151,7 +176,6 @@ def blocked_reduce(block_fn: Callable[..., Any], arrays: Sequence[Array],
                     constant_values=v)
             for a, v in zip(arrays, pv))
     nb = (n + pad) // r
-    tmap = jax.tree_util.tree_map
     if strategy == "whole":
         blocks = tuple(
             constrain(a.reshape((nb, r) + a.shape[1:]),
@@ -165,7 +189,8 @@ def blocked_reduce(block_fn: Callable[..., Any], arrays: Sequence[Array],
         # data-dependently.  All partials still materialize at once,
         # which is this strategy's memory signature.
         parts = lax.map(lambda bs: block_fn(*bs), blocks)
-        acc0 = tmap(lambda x: jnp.zeros(x.shape[1:], x.dtype), parts)
+        acc0 = (tmap(lambda x: jnp.zeros(x.shape[1:], x.dtype), parts)
+                if init is None else init)
         out, _ = lax.scan(lambda acc, g: (tmap(jnp.add, acc, g), None),
                           acc0, parts)
         return out
@@ -180,10 +205,13 @@ def blocked_reduce(block_fn: Callable[..., Any], arrays: Sequence[Array],
             for a in arrays)
         return tmap(jnp.add, acc, block_fn(*blks)), None
 
-    shapes = jax.eval_shape(
-        block_fn, *[jax.ShapeDtypeStruct((r,) + a.shape[1:], a.dtype)
-                    for a in arrays])
-    acc0 = tmap(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+    if init is None:
+        shapes = jax.eval_shape(
+            block_fn, *[jax.ShapeDtypeStruct((r,) + a.shape[1:], a.dtype)
+                        for a in arrays])
+        acc0 = tmap(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+    else:
+        acc0 = init
     out, _ = lax.scan(step, acc0, jnp.arange(nb, dtype=jnp.int32))
     return out
 
@@ -209,7 +237,8 @@ def weighted_gram(X: Array, w: Array, *, intercept: bool = False,
             ws = wb.astype(jnp.float32)
             return jnp.einsum("ni,n,nj->ij", D, ws, D), ws.sum()
         return blocked_reduce(block, (X, w), row_block=row_block,
-                              strategy=strategy, rules=rules)
+                              strategy=strategy, rules=rules,
+                              form="weighted_gram")
 
     def block(Xb, ab, wb):
         D = design(Xb, intercept=intercept, append=ab)
@@ -217,7 +246,8 @@ def weighted_gram(X: Array, w: Array, *, intercept: bool = False,
         return jnp.einsum("ni,n,nj->ij", D, ws, D), ws.sum()
 
     return blocked_reduce(block, (X, append, w), row_block=row_block,
-                          strategy=strategy, rules=rules)
+                          strategy=strategy, rules=rules,
+                          form="weighted_gram")
 
 
 def weighted_gram_and_vec(X: Array, wg: Array, v: Array, *,
@@ -264,7 +294,8 @@ def weighted_gram_and_vec(X: Array, wg: Array, v: Array, *,
                 ws.sum())
 
     return blocked_reduce(block, (X, wg, v), row_block=row_block,
-                          strategy=strategy, rules=rules)
+                          strategy=strategy, rules=rules,
+                          form="weighted_gram_and_vec")
 
 
 # ---------------------------------------------------------------------------
@@ -294,7 +325,7 @@ def fold_gram(X: Array, folds: Array, k: int, *, intercept: bool = False,
     pad_values = (0, -1) + (() if append is None else (0,))
     return blocked_reduce(block, arrays, row_block=row_block,
                           strategy=strategy, rules=rules,
-                          pad_values=pad_values)
+                          pad_values=pad_values, form="fold_gram")
 
 
 def fold_weighted_gram(X: Array, Wk: Array, *, intercept: bool = False,
@@ -322,7 +353,7 @@ def fold_weighted_gram(X: Array, Wk: Array, *, intercept: bool = False,
 
     arrays = (X, Wk.T) + (() if append is None else (append,))
     G = blocked_reduce(block, arrays, row_block=r, strategy=strategy,
-                       rules=rules)
+                       rules=rules, form="fold_weighted_gram")
     return G, n_eff
 
 
@@ -364,7 +395,8 @@ def residual_moments(y: Array, t: Array, my: Array, mt: Array, phi: Array,
             return Gaug[:p, :p], Gaug[:p, p]
 
     return blocked_reduce(block, (y, t, my, mt, phi), row_block=r,
-                          strategy=strategy, rules=rules)
+                          strategy=strategy, rules=rules,
+                          form="residual_moments")
 
 
 def residual_weighted_gram(ry: Array, rt: Array, phi: Array, w: Array,
@@ -388,7 +420,8 @@ def residual_weighted_gram(ry: Array, rt: Array, phi: Array, w: Array,
         return jnp.einsum("ni,n,nj->ij", M, ws, M), ws.sum()
 
     return blocked_reduce(block, (ry, rt, phi, w), row_block=row_block,
-                          strategy=strategy, rules=rules)
+                          strategy=strategy, rules=rules,
+                          form="residual_weighted_gram")
 
 
 def _meat_gram(score: Array, e: Array, p: int) -> Array:
@@ -436,7 +469,8 @@ def residual_meat(y: Array, t: Array, my: Array, mt: Array, phi: Array,
 
     arrays = (y, t, my, mt, phi) + (() if w is None else (w,))
     return blocked_reduce(block, arrays, row_block=row_block,
-                          strategy=strategy, rules=rules)
+                          strategy=strategy, rules=rules,
+                          form="residual_meat")
 
 
 # ---------------------------------------------------------------------------
@@ -476,7 +510,7 @@ def iv_gram(ry: Array, rt: Array, rz: Array, phi: Array, w: Array, *,
 
     return blocked_reduce(block, (ry, rt, rz, phi, w),
                           row_block=row_block, strategy=strategy,
-                          rules=rules)
+                          rules=rules, form="iv_gram")
 
 
 def iv_slices(Gaug: Array, p: int) -> Tuple[Array, Array, Array, Array]:
@@ -521,7 +555,8 @@ def iv_meat(ry: Array, rt: Array, rz: Array, phi: Array, theta: Array,
 
     arrays = (ry, rt, rz, phi) + (() if w is None else (w,))
     return blocked_reduce(block, arrays, row_block=row_block,
-                          strategy=strategy, rules=rules)
+                          strategy=strategy, rules=rules,
+                          form="iv_meat")
 
 
 def fold_iv_gram(ry: Array, rt: Array, rz: Array, phi: Array,
@@ -549,4 +584,5 @@ def fold_iv_gram(ry: Array, rt: Array, rz: Array, phi: Array,
 
     return blocked_reduce(block, (ry, rt, rz, phi, folds),
                           row_block=row_block, strategy=strategy,
-                          rules=rules, pad_values=(0, 0, 0, 0, -1))
+                          rules=rules, pad_values=(0, 0, 0, 0, -1),
+                          form="fold_iv_gram")

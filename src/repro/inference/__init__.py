@@ -1,8 +1,16 @@
-# Distributed bootstrap inference — the third paper-parallelized step
-# class (after §5.1 cross-fitting and §5.2 tuning): EconML's
-# BootstrapInference runs B full re-estimations as Ray tasks; here the
-# B replicates are one batched SPMD program dispatched by a pluggable
-# Executor (serial | vmap | shard_map).
+"""repro.inference — distributed bootstrap/jackknife inference.
+
+The third paper-parallelized step class (after §5.1 cross-fitting and
+§5.2 tuning): EconML's ``BootstrapInference`` runs B full
+re-estimations as Ray tasks; here the B replicates are one batched
+SPMD program dispatched by a pluggable ``Executor``
+(``serial | vmap | shard_map``).  ``numerics`` holds the
+replicate-invariant weighted fit kernels whose serial ≡ vmap bitwise
+contract underwrites every batched CI; pairs and
+multiplier/Bayesian bootstrap, the delete-fold jackknife (one
+segmented pass + k LOO-identity solves), and
+percentile/normal/studentized intervals build on them.
+"""
 #   executor.py   the Executor protocol + backends (the Ray-pool analogue)
 #   numerics.py   replicate-invariant weighted fits (serial == vmap bitwise)
 #   bootstrap.py  pairs + multiplier/Bayesian bootstrap over the executor

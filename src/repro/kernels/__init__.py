@@ -1,4 +1,18 @@
-# Pallas TPU kernels (validated with interpret=True on CPU).
+"""repro.kernels — Pallas TPU kernels (interpret-mode certified on CPU).
+
+Each kernel directory ships ``kernel.py`` (the ``pl.pallas_call`` +
+BlockSpec), ``ops.py`` (a jit'd dispatch wrapper with backend
+selection), and ``ref.py`` (a pure-jnp oracle for tests).  The causal
+workload's hot spot is the fused segment-Gram family (``seg_gram``),
+reached from estimation code via
+``CausalConfig.row_block_strategy="pallas"``: one kernel streams
+``(block_n, p)`` tiles HBM→VMEM, runs the per-row builder in
+registers, and accumulates per-segment augmented Grams — with a
+``pallas → chunked → whole`` fallback ladder (counter-instrumented on
+``repro.obs.metrics.default_registry``) for forms without a fused
+builder.  ``flash_attention`` and ``ssm_scan`` serve the LM-backbone
+nuisances.
+"""
 # Each kernel directory ships kernel.py (pl.pallas_call + BlockSpec),
 # ops.py (jit'd dispatch wrapper) and ref.py (pure-jnp oracle).
 #

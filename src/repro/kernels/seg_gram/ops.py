@@ -68,12 +68,14 @@ def _col(x: Array) -> Array:
     return x[:, None] if x.ndim == 1 else x
 
 
-def _scatter(builder, arrays, seg, w, n_segments, row_block) -> Array:
+def _scatter(builder, arrays, seg, w, n_segments, row_block,
+             init=None) -> Array:
     n = max(a.shape[0] for a in arrays)
     if n_segments == 1:
         L, R = builder(*arrays)
         Lw = L if w is None else L * w
-        return Lw.T @ R
+        G = Lw.T @ R
+        return G if init is None else init + G
     sids = seg[:, 0]
     r = int(row_block or 0)
     if r <= 0 or r >= n:
@@ -81,7 +83,8 @@ def _scatter(builder, arrays, seg, w, n_segments, row_block) -> Array:
         Lw = L if w is None else L * w
         outer = (Lw[:, :, None] * R[:, None, :]).reshape(n, -1)
         G = jax.ops.segment_sum(outer, sids, num_segments=n_segments)
-        return G.reshape(n_segments, L.shape[1], R.shape[1])
+        G = G.reshape(n_segments, L.shape[1], R.shape[1])
+        return G if init is None else init + G
     # blocked scan: bounded O(r * qL*qR) temporaries at industrial n
     pad = (-n) % r
     if pad:
@@ -121,7 +124,12 @@ def _scatter(builder, arrays, seg, w, n_segments, row_block) -> Array:
             None,
         )
 
-    acc0 = jnp.zeros((n_segments, qL * qR), _F32)
+    # init seeds the left fold (repro.store's incremental ingest): the
+    # scan replays the same addition sequence a one-shot pass over the
+    # concatenated rows would, so within-backend ingest stays bitwise
+    # when every prior ingest ended on a row_block boundary.
+    acc0 = (jnp.zeros((n_segments, qL * qR), _F32) if init is None
+            else init.reshape(n_segments, qL * qR))
     G, _ = lax.scan(step, acc0, jnp.arange(nb, dtype=jnp.int32))
     return G.reshape(n_segments, qL, qR)
 
@@ -135,10 +143,17 @@ def seg_reduce(
     n_segments: int = 1,
     row_block: int = 0,
     backend: str = "",
+    init: Optional[Array] = None,
 ) -> Array:
     """The one entry point: dispatch ``G[s] = sum w_n L_n (x) R_n`` to
     the selected lowering.  ``row_block`` sets the kernel block size
-    (and bounds the scatter lowering's temporaries)."""
+    (and bounds the scatter lowering's temporaries).
+
+    ``init`` seeds the accumulator (incremental ingest): the blocked
+    scatter lowering threads it as the scan seed — bitwise the one-shot
+    pass over concatenated rows at aligned boundaries — while the
+    kernel/ref/whole-array lowerings add it to their result (delta-add:
+    correct, tolerance-equal to one-shot)."""
     be = backend or default_backend()
     arrays = [a.astype(_F32) for a in arrays]
     if w is not None:
@@ -147,16 +162,19 @@ def seg_reduce(
         seg = seg.astype(jnp.int32)
         seg = seg[:, None] if seg.ndim == 1 else seg
     if be == "ref":
-        return _ref.seg_gram_ref(
+        G = _ref.seg_gram_ref(
             builder, arrays, seg=seg, w=w, n_segments=n_segments
         )
+        return G if init is None else init + G
     if be == "scatter":
-        return _scatter(builder, arrays, seg, w, n_segments, row_block)
+        return _scatter(
+            builder, arrays, seg, w, n_segments, row_block, init=init
+        )
     if be not in ("pallas", "interpret"):
         raise ValueError(f"unknown seg_gram backend {be!r}")
     interpret = True if be == "interpret" else None
     bn = row_block if 0 < row_block else 512
-    return _kernel.seg_gram_pallas(
+    G = _kernel.seg_gram_pallas(
         builder,
         arrays,
         seg=seg,
@@ -165,6 +183,7 @@ def seg_reduce(
         block_n=bn,
         interpret=interpret,
     )
+    return G if init is None else init + G
 
 
 def segment_counts(
@@ -355,9 +374,11 @@ def segment_outer(
     w: Optional[Array] = None,
     row_block: int = 0,
     backend: str = "",
+    init: Optional[Array] = None,
 ) -> Array:
     """(S, qU, qV) segmented outer-product sums — the sweep's per-step
-    gradient shape (one-hot einsum 'ns,ni,nj->sij', fused)."""
+    gradient shape (one-hot einsum 'ns,ni,nj->sij', fused).  ``init``
+    seeds the accumulator (see ``seg_reduce``)."""
     return seg_reduce(
         _ref.build_pair,
         [_col(U), _col(V)],
@@ -366,4 +387,5 @@ def segment_outer(
         n_segments=n_segments,
         row_block=row_block,
         backend=backend,
+        init=init,
     )

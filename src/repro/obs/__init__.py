@@ -1,4 +1,18 @@
-# repro.obs — zero-dependency observability for the task runtime:
+"""repro.obs — zero-dependency observability.
+
+The paper's argument is ultimately a measurement argument; this
+package makes the same measurements first-class: a hierarchical span
+tracer with ``block_until_ready``-honest durations and
+Chrome-trace/Perfetto export (``trace``), a metrics registry of
+counters / gauges / bounded-reservoir histograms with a plain-JSON
+snapshot (``metrics``), and a predicted-vs-measured cost audit
+joining traced chunks to the affine memory model and HLO roofline
+probes (``audit``).  Thread ONE ``Tracer`` through
+``TaskRuntime(tracer=...)``, ``sweep(tracer=...)``, or
+``MomentStore(tracer=...)``; ``tracer=None`` (the default everywhere)
+records nothing and lowers nothing, so traced and untraced runs
+execute the same compiled programs.
+"""
 #   trace.py    hierarchical span tracer (block_until_ready-honest
 #               durations), Chrome trace-event / Perfetto export,
 #               text tree, per-name rollups

@@ -101,7 +101,13 @@ class Histogram:
 
 class MetricsRegistry:
     """Named get-or-create store for the three instrument kinds, with
-    one JSON-friendly ``snapshot()`` for bench reports and tests."""
+    one JSON-friendly ``snapshot()`` for bench reports and tests.
+
+    Most call sites thread an explicit registry (a ``Tracer`` owns
+    one); ``default_registry()`` below serves the few places with no
+    tracer in scope — e.g. the moments engine's fallback-ladder
+    counter, which fires at *trace time* inside ``jit`` and therefore
+    cannot take a per-call handle."""
 
     def __init__(self) -> None:
         self._counters: Dict[str, Counter] = {}
@@ -136,3 +142,27 @@ class MetricsRegistry:
                 k: h.summary() for k, h in sorted(self._histograms.items())
             },
         }
+
+
+# ---------------------------------------------------------------------------
+# Process-wide default registry.
+# ---------------------------------------------------------------------------
+
+_DEFAULT: Optional[MetricsRegistry] = None
+
+
+def default_registry() -> MetricsRegistry:
+    """The process-wide fallback registry (created on first use).
+
+    Used by instrumentation that runs where no tracer/registry handle
+    can be threaded — notably ``core.moments.blocked_reduce`` counting
+    ``seg_gram.fallback[<form>]`` when ``strategy="pallas"`` ladders
+    down to "chunked" for a form without a fused builder.  Counts are
+    trace-time events: a jit-cached call does not re-trace and so does
+    not re-count (the counter answers "which forms still lack a fused
+    lowering?", not "how many rows took it").
+    """
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = MetricsRegistry()
+    return _DEFAULT

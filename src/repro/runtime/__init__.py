@@ -1,5 +1,16 @@
-# Ray-style task-graph runtime over the Executor backends — the
-# scheduler layer the paper attributes to Ray, translated to SPMD:
+"""repro.runtime — the Ray-style task-graph runtime.
+
+The scheduling layer the paper attributes to Ray, over the Executor
+backends (``serial | vmap | shard_map``): ``TaskFuture`` handles and
+deterministic DAG execution give Ray's ``ObjectRef`` semantics
+(``future``), an affine peak-memory model fitted from two HLO probes
+auto-sizes replicate chunks against ``runtime_memory_budget``
+(``memory``), and ``TaskRuntime`` (``scheduler``) streams the chunks
+with per-chunk retry down the backend-downgrade ladder — results stay
+bit-identical to the no-failure run wherever the replicate-invariance
+contract holds.  Bootstrap, jackknife, crossfit, tuning, refutation,
+and sweep cells all dispatch through it.
+"""
 #   future.py     TaskFuture handles + deterministic DAG execution
 #                 (submit/call/gather — Ray's ObjectRef semantics)
 #   memory.py     affine peak-memory model of the lowered replicate

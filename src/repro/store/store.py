@@ -1,0 +1,342 @@
+"""MomentStore: the persistent, incrementally-updatable effect store.
+
+Lifecycle::
+
+    store = MomentStore(spec, n_features=p, key=key)
+    store.ingest(X=day0.X, y=day0.y, t=day0.t, segment_ids=sids0)
+    panel_v1 = store.refresh()            # EffectPanel, O(p³) per cell
+    store.save(manager)                   # versioned snapshot (v1)
+    store.ingest(X=day1.X, ...)           # one pass over ONLY new rows
+    panel_v2 = store.refresh()
+    store.restore(manager, step=1)        # rollback / hot-swap
+
+Contracts (certified by tests/test_store.py):
+
+  * **Bitwise ingest invariance** — at canonical row-blocked shapes
+    (``cfg.row_block = R > 0``, every ingest except the last a
+    multiple of R), any partition of the rows into ingest blocks
+    yields bit-identical accumulators AND a bit-identical refreshed
+    panel to the single-ingest full rebuild.  This follows from the
+    fixed-order block-fold of ``moments.blocked_reduce`` seeded with
+    the standing accumulator (``init=``) plus the index-keyed fold
+    assignment below.  Misaligned ingests and ``row_block = 0`` remain
+    correct but only tolerance-equal; ``store.aligned`` reports which
+    regime the store is in.
+  * **Streaming-stable folds** — a row's fold is
+    ``randint(fold_in(column_key, global_row_index), k)``: it depends
+    only on the row's global arrival index, never on rows that arrive
+    later (``crossfit.fold_ids``'s balanced permutation depends on
+    total n and would reshuffle history on every ingest).
+  * **Coverage gate** — ``store_supported`` admits the all-ridge
+    continuous-treatment DML and OrthoIV families, whose estimates are
+    exact functionals of the stored moments.  Unsupported columns are
+    fault-isolated: they land as failed ``ColumnResult``s with the
+    gate's reason, never an exception.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import CausalConfig
+from repro.core.final_stage import cate_basis
+from repro.core.registry import EstimatorSpec, get_spec
+from repro.obs.trace import maybe_span
+from repro.store import stats as store_stats
+from repro.store.solve import refresh_column
+from repro.store.stats import ColumnLayout
+from repro.sweep.panel import ColumnResult, EffectPanel
+from repro.sweep.spec import SweepSpec
+
+Array = jax.Array
+_F32 = jnp.float32
+
+
+def store_supported(rspec: EstimatorSpec, cfg: CausalConfig
+                    ) -> Tuple[bool, str]:
+    """Gate: can this column be refreshed exactly from stored moments?
+
+    Returns ``(ok, reason)``.  Admitted: the DML family and the
+    OrthoIV family with all-ridge nuisances and continuous treatment —
+    every statistic they need is a contraction of the store's Gram
+    accumulators.  Excluded: logistic nuisances (per-iteration data
+    passes), DRLearner/DRIV/metalearners (per-row pseudo-outcomes and
+    clipped propensities are not Gram-additive).
+    """
+    if rspec.name.startswith("dml") or rspec.name.startswith("orthoiv"):
+        iv = rspec.needs_instrument
+        if cfg.discrete_treatment:
+            return False, (f"store: {rspec.name} with discrete_treatment "
+                           "needs a logistic propensity (per-iteration "
+                           "data passes); use discrete_treatment=False "
+                           "with nuisance_t='ridge'")
+        for field, kind in (("nuisance_y", cfg.nuisance_y),
+                            ("nuisance_t", cfg.nuisance_t)) + (
+                                (("nuisance_z", cfg.nuisance_z),) if iv
+                                else ()):
+            if kind != "ridge":
+                return False, (f"store: {rspec.name} requires "
+                               f"{field}='ridge' (got {kind!r}) — only "
+                               "ridge normal equations are exact "
+                               "functionals of the stored Grams")
+        return True, ""
+    return False, (f"store: {rspec.name} builds per-row pseudo-outcomes/"
+                   "propensities (not Gram-additive); supported families: "
+                   "dml*, orthoiv* with all-ridge nuisances")
+
+
+def _basis_width(p: int, n_features: int) -> int:
+    """Width of ``cate_basis(X, n_features)`` for X with p columns."""
+    return 1 if n_features <= 1 else 1 + min(n_features - 1, p)
+
+
+@dataclasses.dataclass
+class _Column:
+    name: str
+    cfg: CausalConfig
+    rspec: EstimatorSpec
+    layout: Optional[ColumnLayout]
+    state: Optional[store_stats.State]
+    error: Optional[str]
+
+
+class MomentStore:
+    """Per-(segment, fold) sufficient-statistics store over a SweepSpec.
+
+    ``n_features`` fixes the X width up front so every accumulator (and
+    the checkpoint template) exists before the first row arrives.
+    ``key`` roots the fold-assignment lineage (column i uses
+    ``fold_in(key, i)``, mirroring the sweep's ``column_keys``).
+    """
+
+    def __init__(self, spec: SweepSpec, n_features: int,
+                 key: Optional[Array] = None, *, tracer=None):
+        self.spec = spec
+        self.n_features = int(n_features)
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.tracer = tracer
+        self.n_total = 0
+        self.n_ingests = 0
+        self.version = 0
+        self.aligned = True
+        self.seg_counts = jnp.zeros((spec.n_segments,), _F32)
+        self._cols: List[_Column] = []
+        self._jit_cache: Dict[Any, Any] = {}
+        for name, cfg in spec.columns:
+            rspec = get_spec(name)
+            ok, reason = store_supported(rspec, cfg)
+            if not ok:
+                self._cols.append(_Column(name, cfg, rspec, None, None,
+                                          reason))
+                continue
+            layout = ColumnLayout(
+                p=self.n_features,
+                pf=_basis_width(self.n_features, cfg.cate_features),
+                k=cfg.n_folds,
+                iv=rspec.needs_instrument,
+            )
+            state = store_stats.init_state(layout,
+                                           spec.n_segments * layout.k)
+            self._cols.append(_Column(name, cfg, rspec, layout, state,
+                                      None))
+
+    # ------------------------------------------------------------------
+    # Fold lineage
+    # ------------------------------------------------------------------
+    def column_key(self, col_index: int) -> Array:
+        """The fold-assignment key of column ``col_index``."""
+        return jax.random.fold_in(self.key, col_index)
+
+    def fold_assignment(self, col_index: int, start: int, n: int) -> Array:
+        """Folds of global rows [start, start+n) for one column —
+        index-keyed, so a row's fold never depends on later arrivals."""
+        col = self._cols[col_index]
+        if col.layout is None:
+            raise ValueError(col.error)
+        return _row_folds(self.column_key(col_index), start, n,
+                          col.layout.k)
+
+    # ------------------------------------------------------------------
+    # Ingest
+    # ------------------------------------------------------------------
+    def ingest(self, *, X: Array, y: Array, t: Array, segment_ids: Array,
+               z: Optional[Array] = None) -> "MomentStore":
+        """Fold a new row block into every supported column's cells.
+
+        One fused/blocked pass per column over ONLY the new rows.
+        Empty blocks are exact no-ops on the accumulators (the version
+        still advances).  Returns ``self``.
+        """
+        n = int(X.shape[0])
+        if X.ndim != 2 or X.shape[1] != self.n_features:
+            raise ValueError(f"store: X must be (n, {self.n_features}), "
+                             f"got {X.shape}")
+        needs_z = any(c.layout is not None and c.layout.iv
+                      for c in self._cols)
+        if needs_z and z is None:
+            raise ValueError("store: spec has instrumented columns; "
+                             "ingest requires z")
+        with maybe_span(self.tracer, "store.ingest", cat="store",
+                        rows=n, version=self.version + 1):
+            if n:
+                for i, col in enumerate(self._cols):
+                    if col.layout is None:
+                        continue
+                    rb = col.cfg.row_block
+                    if rb > 0 and self.n_total % rb != 0:
+                        # prior ingests broke block alignment: still
+                        # correct, but the bitwise contract degrades
+                        # to tolerance from here on
+                        self.aligned = False
+                    fn = self._ingest_fn(i)
+                    args = (col.state, X, t, y, segment_ids,
+                            jnp.uint32(self.n_total),
+                            self.column_key(i))
+                    col.state = fn(*args, z) if col.layout.iv else fn(*args)
+                self.seg_counts = self.seg_counts + _seg_counts(
+                    segment_ids, self.spec.n_segments)
+                self.n_total += n
+            self.version += 1
+            self.n_ingests += 1
+        if self.tracer is not None:
+            m = self.tracer.metrics
+            m.counter("store.ingests").inc()
+            m.counter("store.ingest.rows").inc(n)
+            m.gauge("store.version").set(self.version)
+        return self
+
+    def _ingest_fn(self, col_index: int):
+        col = self._cols[col_index]
+        cfg, layout = col.cfg, col.layout
+        ck = ("ingest", cfg, self.spec.n_segments, layout)
+        fn = self._jit_cache.get(ck)
+        if fn is not None:
+            return fn
+        n_cells = self.spec.n_segments * layout.k
+
+        def _run(state, X, t, y, sids, start, col_key, z=None):
+            folds = _row_folds(col_key, start, X.shape[0], layout.k)
+            comb = sids.astype(jnp.int32) * layout.k + folds
+            phi = cate_basis(X, cfg.cate_features)
+            return store_stats.ingest_cells(
+                layout, state, X, t, y, z, phi, comb, n_cells,
+                row_block=cfg.row_block, strategy=cfg.row_block_strategy)
+
+        fn = jax.jit(_run)
+        self._jit_cache[ck] = fn
+        return fn
+
+    # ------------------------------------------------------------------
+    # Refresh
+    # ------------------------------------------------------------------
+    def refresh(self) -> EffectPanel:
+        """Re-solve every column from its accumulators (no data pass)
+        and emit the refreshed ``EffectPanel``."""
+        with maybe_span(self.tracer, "store.refresh", cat="store",
+                        version=self.version, n_total=self.n_total):
+            columns = []
+            tag = (f"store:v{self.version}",)
+            for i, col in enumerate(self._cols):
+                if col.layout is None:
+                    columns.append(ColumnResult(
+                        estimator=col.name, cfg=col.cfg, key_index=i,
+                        error=col.error))
+                    continue
+                out = self._refresh_fn(i)(col.state)
+                columns.append(ColumnResult(
+                    estimator=col.name, cfg=col.cfg,
+                    thetas=out["theta"], ates=out["ate"], ses=out["se"],
+                    key_index=i, events=tag))
+            panel = EffectPanel(columns=tuple(columns),
+                                counts=self.seg_counts,
+                                n_segments=self.spec.n_segments,
+                                segment_key=self.spec.segment_key)
+        if self.tracer is not None:
+            self.tracer.metrics.counter("store.refreshes").inc()
+        return panel
+
+    def _refresh_fn(self, col_index: int):
+        col = self._cols[col_index]
+        cfg, layout = col.cfg, col.layout
+        ck = ("refresh", cfg, self.spec.n_segments, layout)
+        fn = self._jit_cache.get(ck)
+        if fn is None:
+            fn = jax.jit(lambda state: refresh_column(
+                layout, state, self.spec.n_segments,
+                ridge_lambda=cfg.ridge_lambda))
+            self._jit_cache[ck] = fn
+        return fn
+
+    # ------------------------------------------------------------------
+    # Versioned snapshots (checkpoint/)
+    # ------------------------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        """The checkpointable pytree: segment counts + per-supported-
+        column accumulators (keyed by column index)."""
+        d: Dict[str, Any] = {"seg_counts": self.seg_counts}
+        for i, col in enumerate(self._cols):
+            if col.state is not None:
+                d[f"col{i}"] = col.state
+        return d
+
+    def _meta(self) -> Dict[str, Any]:
+        return {
+            "n_total": self.n_total,
+            "n_ingests": self.n_ingests,
+            "aligned": self.aligned,
+            "n_features": self.n_features,
+            "n_segments": self.spec.n_segments,
+            "segment_key": self.spec.segment_key,
+            "columns": [c.name for c in self._cols],
+        }
+
+    def save(self, manager, *, metric: Optional[float] = None) -> int:
+        """Snapshot the store at its current version through a
+        ``checkpoint.CheckpointManager`` (atomic tmp+rename).  Returns
+        the step (= version) written."""
+        manager.save(self.version, self.state_dict(), metric=metric,
+                     extra=self._meta())
+        return self.version
+
+    def restore(self, manager, *, step: Optional[int] = None
+                ) -> "MomentStore":
+        """Hot-swap/rollback: replace the accumulators with snapshot
+        ``step`` (latest if None).  Spec provenance is checked so a
+        checkpoint from a different column set fails loudly."""
+        state, meta = manager.restore(self.state_dict(), step=step)
+        extra = meta.get("extra", {})
+        want = [c.name for c in self._cols]
+        if extra.get("columns") != want:
+            raise ValueError(
+                f"store: checkpoint columns {extra.get('columns')} do not "
+                f"match this spec's {want}")
+        if extra.get("n_features") != self.n_features:
+            raise ValueError(
+                f"store: checkpoint n_features {extra.get('n_features')} "
+                f"!= {self.n_features}")
+        self.seg_counts = state["seg_counts"]
+        for i, col in enumerate(self._cols):
+            if col.state is not None:
+                col.state = state[f"col{i}"]
+        self.version = int(meta["step"])
+        self.n_total = int(extra.get("n_total", 0))
+        self.n_ingests = int(extra.get("n_ingests", 0))
+        self.aligned = bool(extra.get("aligned", True))
+        return self
+
+
+def _row_folds(col_key: Array, start, n: int, k: int) -> Array:
+    idx = jnp.asarray(start, jnp.uint32) + jnp.arange(n, dtype=jnp.uint32)
+    keys = jax.vmap(lambda i: jax.random.fold_in(col_key, i))(idx)
+    return jax.vmap(
+        lambda kk: jax.random.randint(kk, (), 0, k))(keys).astype(jnp.int32)
+
+
+def _seg_counts(sids: Array, n_segments: int) -> Array:
+    return jax.ops.segment_sum(jnp.ones((sids.shape[0],), _F32),
+                               sids.astype(jnp.int32),
+                               num_segments=n_segments)

@@ -1,5 +1,18 @@
-# Segment-parallel sweeps: the paper's many-cohorts workload (estimate
-# E effects × C estimator-configs as batched programs, not a loop).
+"""repro.sweep — segment-parallel sweeps: the many-cohorts workload.
+
+The paper's case study is not one estimation but many (per user
+segment / treatment cohort / config variant) fanned out on Ray; here
+the (E segments × C estimator-configs) grid of a ``SweepSpec`` runs
+as batched programs.  Cells mode treats every cell as a masked
+weighted single fit (bitwise ≡ a Python loop of single fits at
+canonical row-blocked shapes), shared-nuisance reuse collapses
+columns that differ only in final stage onto one residual pass, and
+segmented mode solves all E·K fold-complement normal equations from
+ONE combined segment×fold Gram pass (DML family).  Results land in an
+``EffectPanel`` with per-cell validity instead of exceptions; the
+persistent, incrementally refreshed variant of this panel lives in
+``repro.store``.
+"""
 #   spec.py       SweepSpec — the (segments × estimator-configs) grid
 #   engine.py     sweep() / serial_loop(): masked weighted cells
 #                 through the task runtime (bitwise ≡ the loop of

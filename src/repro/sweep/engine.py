@@ -88,33 +88,33 @@ def _runtime(cfg: CausalConfig, executor, tracer=None):
 
 
 def _make_masked_cell(cell):
-    def masked_cell(xs, d):
+    def _masked_cell(xs, d):
         w = _segment_mask(d["sids"], xs["sid"])
         return cell(xs["key"], w, d)
 
-    return masked_cell
+    return _masked_cell
 
 
 def _make_masked_resid(resid_fn):
-    def masked_resid(xs, d):
+    def _masked_resid(xs, d):
         w = _segment_mask(d["sids"], xs["sid"])
         return resid_fn(xs["key"], w, d)
 
-    return masked_resid
+    return _masked_resid
 
 
 def _make_masked_final(final_fn):
-    def masked_final(xs, d):
+    def _masked_final(xs, d):
         w = _segment_mask(d["sids"], xs["sid"])
         return final_fn(xs["resid"], w, d)
 
-    return masked_final
+    return _masked_final
 
 
 def _make_replicate_cell(cell, scheme: str):
     from repro.inference.bootstrap import bootstrap_weights
 
-    def rep_cell(xo, kb, d):
+    def _rep_cell(xo, kb, d):
         # per-(cell, replicate) randomness: the replicate key folds in
         # the segment id, then splits into (resample, fit) keys
         kcell = jax.random.fold_in(kb, xo["sid"].astype(jnp.uint32))
@@ -125,7 +125,7 @@ def _make_replicate_cell(cell, scheme: str):
         out = cell(kfit, w, d)
         return {"theta": out["theta"], "ate": out["ate"]}
 
-    return rep_cell
+    return _rep_cell
 
 
 def _column_data(base_data: Dict[str, Any], cfg: CausalConfig) -> Dict[str, Any]:

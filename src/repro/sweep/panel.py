@@ -39,6 +39,7 @@ class ColumnResult:
 
     @property
     def failed(self) -> bool:
+        """Whether this column errored (its cells carry no estimates)."""
         return self.error is not None
 
     def ok(self, counts: jax.Array) -> jax.Array:
@@ -62,6 +63,7 @@ class EffectPanel:
 
     @property
     def n_columns(self) -> int:
+        """Number of estimator-config columns C."""
         return len(self.columns)
 
     def ok(self) -> jax.Array:
@@ -82,6 +84,7 @@ class EffectPanel:
         return tuple((i, c.error) for i, c in enumerate(self.columns) if c.failed)
 
     def summary(self) -> str:
+        """Human-readable panel overview (shape, validity, failures)."""
         ok = self.ok()
         head = f"EffectPanel: {self.n_segments} segments x {self.n_columns} columns"
         if self.segment_key:

@@ -132,7 +132,7 @@ def _segment_fold_logistic(
             t2 = jnp.einsum("nc,n,np->cp", oh_comb, rr, Xa)
             return t1, t2.reshape(n_segments, k, q)
 
-    def step(_, beta):  # beta: (E, k, q)
+    def _step(_, beta):  # beta: (E, k, q)
         bs = beta[sids]  # (n, k, q)
         mu = jax.nn.sigmoid(jnp.einsum("np,nkp->nk", Xa, bs))
         r = mu - tt[:, None]  # (n, k)
@@ -142,7 +142,7 @@ def _segment_fold_logistic(
         g = (t1 - t2) / n_eff[..., None] + lam * beta
         return beta - jax.vmap(jax.vmap(det_solve))(H0, g)
 
-    return jax.lax.fori_loop(0, iters, step, jnp.zeros((n_segments, k, q), _F32))
+    return jax.lax.fori_loop(0, iters, _step, jnp.zeros((n_segments, k, q), _F32))
 
 
 def _segment_final_stage(

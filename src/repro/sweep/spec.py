@@ -59,6 +59,7 @@ class SweepSpec:
 
     @property
     def n_cells(self) -> int:
+        """Total grid size E x C."""
         return self.n_segments * len(self.columns)
 
 

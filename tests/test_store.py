@@ -1,0 +1,384 @@
+"""repro.store certification: incremental ingest against the full
+rebuild it replaces.
+
+Contracts:
+  * ``ingest(block1); ingest(block2); refresh()`` is BITWISE identical
+    to one ingest of the concatenated rows at the canonical row-blocked
+    shapes (every split on a ``row_block`` boundary), for EVERY
+    store-supported registry estimator — accumulators and panel alike;
+  * every registry estimator outside the ``store_supported`` gate
+    fault-isolates as a failed column with the gate's reason, without
+    poisoning supported neighbors;
+  * the refreshed estimates match a float64 dense reference computed
+    from the store's own fold assignment (tolerance — the store is a
+    different execution of the same estimator, like the segmented
+    sweep);
+  * empty ingests are exact no-ops; fold assignment is streaming-stable;
+    misaligned ingests flip ``store.aligned``;
+  * strategy="pallas" ingest is bitwise partition-invariant within the
+    scatter lowering and tolerance-equal to chunked;
+  * versioned snapshots through ``checkpoint.CheckpointManager`` roll
+    back to bit-identical panels;
+  * ingest/refresh emit obs spans and metrics, and tracing changes no
+    bits.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.config import CausalConfig
+from repro.core.registry import ROW_BLOCK, SPECS, get_spec
+from repro.data.causal_dgp import make_causal_data, make_iv_data
+from repro.obs.trace import Tracer
+from repro.store import MomentStore, store_supported
+from repro.sweep.spec import SweepSpec
+
+N, E, P = 1100, 5, 6
+_SKEY = jax.random.PRNGKey(11)
+
+ALL_ESTIMATORS = tuple(s.name for s in SPECS)
+SUPPORTED = ("dml", "dml_p2_rb", "dml_loo", "orthoiv", "orthoiv_p2_rb")
+UNSUPPORTED = tuple(n for n in ALL_ESTIMATORS if n not in SUPPORTED)
+
+
+def _cfg(name: str) -> CausalConfig:
+    """The canonical store config: all-ridge nuisances, continuous
+    treatment, blocked rows (the bitwise-contract regime)."""
+    return CausalConfig(
+        n_folds=3, inference="none", row_block=ROW_BLOCK,
+        nuisance_t="ridge", nuisance_z="ridge", discrete_treatment=False,
+        cate_features=2 if "p2" in name else 1)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_causal_data(jax.random.PRNGKey(42), N, P, effect=1.2,
+                            discrete_treatment=False)
+
+
+@pytest.fixture(scope="module")
+def iv_data():
+    return make_iv_data(jax.random.PRNGKey(42), N, P, effect=1.2,
+                        compliance=0.75)
+
+
+@pytest.fixture(scope="module")
+def sids():
+    return jax.random.randint(jax.random.PRNGKey(9), (N,), 0, E)
+
+
+def _arrays(name, data, iv_data, sids):
+    d = iv_data if get_spec(name).needs_instrument else data
+    kw = dict(X=d.X, y=d.y, t=d.t, segment_ids=sids)
+    if get_spec(name).needs_instrument:
+        kw["z"] = d.z
+    return kw
+
+
+def _sliced(kw, lo, hi):
+    return {k: v[lo:hi] for k, v in kw.items()}
+
+
+def _ingest_partition(spec, kw, cuts, key=_SKEY, tracer=None):
+    """Build a store and ingest ``kw`` split at row indices ``cuts``."""
+    store = MomentStore(spec, n_features=P, key=key, tracer=tracer)
+    bounds = [0] + list(cuts) + [kw["X"].shape[0]]
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        store.ingest(**_sliced(kw, lo, hi))
+    return store
+
+
+def _assert_panels_equal(pa, pb):
+    for ca, cb in zip(pa.columns, pb.columns):
+        assert ca.error == cb.error
+        if ca.error is None:
+            np.testing.assert_array_equal(np.asarray(ca.thetas),
+                                          np.asarray(cb.thetas))
+            np.testing.assert_array_equal(np.asarray(ca.ses),
+                                          np.asarray(cb.ses))
+            np.testing.assert_array_equal(np.asarray(ca.ates),
+                                          np.asarray(cb.ates))
+    np.testing.assert_array_equal(np.asarray(pa.counts),
+                                  np.asarray(pb.counts))
+
+
+def _assert_states_equal(sa, sb):
+    fa, fb = sa.state_dict(), sb.state_dict()
+    assert set(fa) == set(fb)
+    for k in fa:
+        la = jax.tree_util.tree_leaves(fa[k])
+        lb = jax.tree_util.tree_leaves(fb[k])
+        for a, b in zip(la, lb):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# The bitwise ingest contract, certified for every registry estimator.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", SUPPORTED)
+def test_ingest_partition_bitwise(name, data, iv_data, sids):
+    kw = _arrays(name, data, iv_data, sids)
+    spec = SweepSpec(n_segments=E, columns=((name, _cfg(name)),))
+    full = _ingest_partition(spec, kw, ())
+    # splits on ROW_BLOCK boundaries — the canonical row-blocked shapes
+    inc = _ingest_partition(spec, kw, (2 * ROW_BLOCK,))
+    _assert_states_equal(full, inc)
+    _assert_panels_equal(full.refresh(), inc.refresh())
+    assert full.aligned and inc.aligned
+    # a three-way split, including an uneven final remainder block
+    inc3 = _ingest_partition(spec, kw, (ROW_BLOCK, 3 * ROW_BLOCK))
+    _assert_states_equal(full, inc3)
+    _assert_panels_equal(full.refresh(), inc3.refresh())
+
+
+@pytest.mark.parametrize("name", UNSUPPORTED)
+def test_unsupported_estimators_gated(name, data, iv_data, sids):
+    ok, reason = store_supported(get_spec(name), _cfg(name))
+    assert not ok and "store" in reason
+    # the failed column fault-isolates; the supported neighbor is intact
+    spec = SweepSpec(n_segments=E,
+                     columns=(("dml", _cfg("dml")), (name, _cfg(name))))
+    kw = _arrays(name, data, iv_data, sids)
+    if "z" not in kw:  # always carry z so instrumented neighbors load
+        kw["z"] = iv_data.z
+    store = _ingest_partition(spec, kw, (2 * ROW_BLOCK,))
+    panel = store.refresh()
+    assert panel.columns[1].failed and "store" in panel.columns[1].error
+    assert panel.columns[0].error is None
+    assert bool(panel.columns[0].ok(panel.counts).all())
+    ref = _ingest_partition(
+        SweepSpec(n_segments=E, columns=(("dml", _cfg("dml")),)), kw, ())
+    np.testing.assert_array_equal(np.asarray(panel.columns[0].thetas),
+                                  np.asarray(ref.refresh().columns[0].thetas))
+
+
+def test_logistic_config_gated():
+    cfg = CausalConfig(n_folds=3, inference="none")  # default: logistic t
+    ok, reason = store_supported(get_spec("dml"), cfg)
+    assert not ok and "store" in reason
+
+
+# ---------------------------------------------------------------------------
+# Edge cases: empty blocks, misalignment, fold stability.
+# ---------------------------------------------------------------------------
+
+def test_empty_ingest_is_exact_noop(data, sids):
+    spec = SweepSpec(n_segments=E, columns=(("dml", _cfg("dml")),))
+    kw = _arrays("dml", data, None, sids)
+    a = _ingest_partition(spec, kw, ())
+    b = MomentStore(spec, n_features=P, key=_SKEY)
+    b.ingest(**_sliced(kw, 0, 0))                       # leading empty
+    b.ingest(**_sliced(kw, 0, 2 * ROW_BLOCK))
+    b.ingest(**_sliced(kw, N, N))                       # interior empty
+    b.ingest(**_sliced(kw, 2 * ROW_BLOCK, N))
+    b.ingest(**_sliced(kw, 0, 0))                       # trailing empty
+    _assert_states_equal(a, b)
+    _assert_panels_equal(a.refresh(), b.refresh())
+    assert b.n_ingests == 5 and b.version == 5 and b.n_total == N
+
+
+def test_misaligned_ingest_flags_tolerance_regime(data, sids):
+    spec = SweepSpec(n_segments=E, columns=(("dml", _cfg("dml")),))
+    kw = _arrays("dml", data, None, sids)
+    s = _ingest_partition(spec, kw, (300,))  # not a ROW_BLOCK multiple
+    assert not s.aligned
+    # still numerically the same estimator
+    full = _ingest_partition(spec, kw, ())
+    np.testing.assert_allclose(
+        np.asarray(s.refresh().columns[0].thetas),
+        np.asarray(full.refresh().columns[0].thetas),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_fold_assignment_streaming_stable(data, sids):
+    spec = SweepSpec(n_segments=E, columns=(("dml", _cfg("dml")),))
+    store = MomentStore(spec, n_features=P, key=_SKEY)
+    whole = np.asarray(store.fold_assignment(0, 0, N))
+    head = np.asarray(store.fold_assignment(0, 0, 512))
+    tail = np.asarray(store.fold_assignment(0, 512, N - 512))
+    np.testing.assert_array_equal(whole, np.concatenate([head, tail]))
+    k = _cfg("dml").n_folds
+    assert set(np.unique(whole)) <= set(range(k))
+    # every fold is populated at this n (sanity on the keyed draw)
+    assert len(np.unique(whole)) == k
+
+
+def test_zero_row_segment_flagged_not_crashed(data):
+    sids0 = jnp.zeros((N,), jnp.int32)  # all rows in segment 0
+    spec = SweepSpec(n_segments=3, columns=(("dml", _cfg("dml")),))
+    store = MomentStore(spec, n_features=P, key=_SKEY)
+    store.ingest(X=data.X, y=data.y, t=data.t, segment_ids=sids0)
+    panel = store.refresh()
+    col = panel.columns[0]
+    assert np.isfinite(np.asarray(col.thetas)).all()
+    ok = np.asarray(col.ok(panel.counts))
+    assert ok[0] and not ok[1] and not ok[2]
+
+
+# ---------------------------------------------------------------------------
+# Tolerance certification against a float64 dense reference.
+# ---------------------------------------------------------------------------
+
+def _dense_reference(name, cfg, kw, folds):
+    """Float64 single-pass reference on the store's fold assignment."""
+    X = np.asarray(kw["X"], np.float64)
+    y = np.asarray(kw["y"], np.float64)
+    t = np.asarray(kw["t"], np.float64)
+    z = np.asarray(kw["z"], np.float64) if "z" in kw else None
+    sids = np.asarray(kw["segment_ids"])
+    folds = np.asarray(folds)
+    n, p = X.shape
+    k, lam = cfg.n_folds, cfg.ridge_lambda
+    xa = np.concatenate([X, np.ones((n, 1))], axis=1)
+    pf = 1 if cfg.cate_features <= 1 else cfg.cate_features
+    phi = (np.ones((n, 1)) if pf == 1 else
+           np.concatenate([np.ones((n, 1)), X[:, :pf - 1]], axis=1))
+    thetas = []
+    iv = get_spec(name).needs_instrument
+    for s in range(E):
+        inseg = sids == s
+        ry, rt = np.zeros(n), np.zeros(n)
+        rz = np.zeros(n)
+        for f in range(k):
+            own = inseg & (folds == f)
+            comp = inseg & (folds != f)
+            nc = max(comp.sum(), 1)
+            A = xa[comp].T @ xa[comp] / nc + lam * np.eye(p + 1)
+            for target, out in ((y, ry), (t, rt)) + (
+                    ((z, rz),) if iv else ()):
+                beta = np.linalg.solve(A, xa[comp].T @ target[comp] / nc)
+                out[own] = target[own] - xa[own] @ beta
+        nseg = max(inseg.sum(), 1)
+        zt = rt[inseg, None] * phi[inseg]
+        if iv:
+            zz = rz[inseg, None] * phi[inseg]
+            a = zz.T @ zt + 1e-8 * nseg * np.eye(pf)
+            thetas.append(np.linalg.solve(a, zz.T @ ry[inseg]))
+        else:
+            a = zt.T @ zt + 1e-8 * nseg * np.eye(pf)
+            thetas.append(np.linalg.solve(a, zt.T @ ry[inseg]))
+    return np.stack(thetas)
+
+
+@pytest.mark.parametrize("name", ("dml", "dml_p2_rb", "orthoiv"))
+def test_refresh_matches_dense_reference(name, data, iv_data, sids):
+    cfg = _cfg(name)
+    kw = _arrays(name, data, iv_data, sids)
+    spec = SweepSpec(n_segments=E, columns=((name, cfg),))
+    store = _ingest_partition(spec, kw, (2 * ROW_BLOCK,))
+    got = np.asarray(store.refresh().columns[0].thetas)
+    want = _dense_reference(name, cfg, kw, store.fold_assignment(0, 0, N))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_dml_recovers_effect(data, sids):
+    spec = SweepSpec(n_segments=E, columns=(("dml", _cfg("dml")),))
+    store = _ingest_partition(spec, _arrays("dml", data, None, sids), ())
+    ates = np.asarray(store.refresh().columns[0].ates)
+    assert np.all(np.abs(ates - data.true_ate) < 0.2)
+
+
+# ---------------------------------------------------------------------------
+# Pallas-strategy ingest (fused segment-outer kernels).
+# ---------------------------------------------------------------------------
+
+def test_pallas_ingest_partition_bitwise_and_tolerance(data, sids):
+    from repro.kernels.seg_gram.ops import force_backend
+
+    cfgp = CausalConfig(
+        n_folds=3, inference="none", row_block=ROW_BLOCK,
+        nuisance_t="ridge", discrete_treatment=False,
+        row_block_strategy="pallas")
+    spec = SweepSpec(n_segments=E, columns=(("dml", cfgp),))
+    kw = _arrays("dml", data, None, sids)
+    with force_backend("scatter"):
+        full = _ingest_partition(spec, kw, ())
+        inc = _ingest_partition(spec, kw, (2 * ROW_BLOCK,))
+        _assert_states_equal(full, inc)
+        _assert_panels_equal(full.refresh(), inc.refresh())
+        theta_p = np.asarray(full.refresh().columns[0].thetas)
+    chunked = _ingest_partition(
+        SweepSpec(n_segments=E, columns=(("dml", _cfg("dml")),)), kw, ())
+    np.testing.assert_allclose(
+        theta_p, np.asarray(chunked.refresh().columns[0].thetas),
+        rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Versioned snapshots (checkpoint/) — hot-swap and rollback.
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_rollback_bitwise(tmp_path, data, sids):
+    spec = SweepSpec(n_segments=E, columns=(("dml", _cfg("dml")),))
+    kw = _arrays("dml", data, None, sids)
+    manager = CheckpointManager(str(tmp_path), keep_latest=8)
+    store = MomentStore(spec, n_features=P, key=_SKEY)
+    store.ingest(**_sliced(kw, 0, 2 * ROW_BLOCK))
+    v1 = store.save(manager)
+    p1 = store.refresh()
+    store.ingest(**_sliced(kw, 2 * ROW_BLOCK, N))
+    v2 = store.save(manager)
+    p2 = store.refresh()
+    assert manager.latest_step() == v2 and v2 > v1
+    assert not np.array_equal(np.asarray(p1.columns[0].thetas),
+                              np.asarray(p2.columns[0].thetas))
+    store.restore(manager, step=v1)  # rollback
+    assert store.version == v1 and store.n_total == 2 * ROW_BLOCK
+    _assert_panels_equal(store.refresh(), p1)
+    store.restore(manager)  # hot-swap forward to latest
+    _assert_panels_equal(store.refresh(), p2)
+    # ingest continues correctly after a rollback round-trip
+    store.restore(manager, step=v1)
+    store.ingest(**_sliced(kw, 2 * ROW_BLOCK, N))
+    _assert_panels_equal(store.refresh(), p2)
+
+
+def test_checkpoint_provenance_mismatch_raises(tmp_path, data, sids):
+    kw = _arrays("dml", data, None, sids)
+    manager = CheckpointManager(str(tmp_path), keep_latest=8)
+    a = MomentStore(SweepSpec(n_segments=E, columns=(("dml", _cfg("dml")),)),
+                    n_features=P, key=_SKEY)
+    a.ingest(**kw)
+    a.save(manager)
+    b = MomentStore(
+        SweepSpec(n_segments=E, columns=(("dml_loo", _cfg("dml_loo")),)),
+        n_features=P, key=_SKEY)
+    with pytest.raises(ValueError, match="columns"):
+        b.restore(manager)
+
+
+# ---------------------------------------------------------------------------
+# Observability: spans, metrics, and no-bit-perturbation.
+# ---------------------------------------------------------------------------
+
+def test_obs_spans_and_metrics(data, sids):
+    spec = SweepSpec(n_segments=E, columns=(("dml", _cfg("dml")),))
+    kw = _arrays("dml", data, None, sids)
+    tracer = Tracer()
+    traced = _ingest_partition(spec, kw, (2 * ROW_BLOCK,), tracer=tracer)
+    p_traced = traced.refresh()
+    names = [s.name for s in tracer.spans]
+    assert names.count("store.ingest") == 2
+    assert "store.refresh" in names
+    snap = tracer.metrics.snapshot()["counters"]
+    assert snap["store.ingests"] == 2
+    assert snap["store.ingest.rows"] == N
+    assert snap["store.refreshes"] == 1
+    plain = _ingest_partition(spec, kw, (2 * ROW_BLOCK,))
+    _assert_panels_equal(p_traced, plain.refresh())
+
+
+def test_fallback_rung_counter():
+    from repro.core import moments
+    from repro.obs.metrics import default_registry
+
+    c = default_registry().counter("seg_gram.fallback[fold_weighted_gram]")
+    before = c.value
+    X = jnp.ones((64, 3), jnp.float32)
+    Wk = jnp.ones((2, 64), jnp.float32)
+    moments.fold_weighted_gram(X, Wk, row_block=16, strategy="pallas")
+    assert c.value == before + 1

@@ -1,0 +1,80 @@
+"""Docs link checker for CI.
+
+Verifies that (a) every relative markdown link in README.md and
+docs/*.md points at a file or directory that exists (anchors and
+external http(s)/mailto links are skipped), and (b) every path-shaped
+row of the README "Repo map" table resolves.  Exits non-zero listing
+each dead link so the lint job fails loudly instead of shipping
+stale docs.
+
+Usage: python tools/check_docs.py  (from the repo root or anywhere)
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+REPO_MAP_ROW_RE = re.compile(r"^\|\s*`([^`]+)`")
+
+
+def _iter_md_files():
+    yield ROOT / "README.md"
+    docs = ROOT / "docs"
+    if docs.is_dir():
+        yield from sorted(docs.glob("*.md"))
+
+
+def check_links(md: Path) -> list[str]:
+    """Return one error string per unresolvable relative link in *md*."""
+    errors = []
+    for lineno, line in enumerate(md.read_text().splitlines(), 1):
+        for target in LINK_RE.findall(line):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (md.parent / path).exists():
+                rel = md.relative_to(ROOT)
+                errors.append(f"{rel}:{lineno}: dead link -> {target}")
+    return errors
+
+
+def check_repo_map(readme: Path) -> list[str]:
+    """Return errors for README repo-map rows whose paths don't exist."""
+    errors = []
+    in_map = False
+    for lineno, line in enumerate(readme.read_text().splitlines(), 1):
+        if line.startswith("## "):
+            in_map = line.strip() == "## Repo map"
+            continue
+        if not in_map:
+            continue
+        m = REPO_MAP_ROW_RE.match(line)
+        if not m:
+            continue
+        path = m.group(1).rstrip("/")
+        if not (ROOT / path).exists():
+            errors.append(f"README.md:{lineno}: repo-map path missing -> {path}")
+    return errors
+
+
+def main() -> int:
+    """Run both checks; print failures and return a process exit code."""
+    errors = []
+    for md in _iter_md_files():
+        errors += check_links(md)
+    errors += check_repo_map(ROOT / "README.md")
+    if errors:
+        print("\n".join(errors))
+        print(f"\nFAIL: {len(errors)} dead doc link(s)/path(s)")
+        return 1
+    print("OK: all doc links and repo-map paths resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
