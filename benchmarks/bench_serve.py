@@ -1,0 +1,162 @@
+"""Online effect-serving: p50/p99 request latency + throughput under
+wave batching — the production workload the estimation side feeds
+(Netflix "Computational Causal Inference": serving effects to product
+traffic is a first-class workload, not a by-product of fitting).
+
+Three gated measurements of the same store-fed panel:
+
+  serve_wave          one full admission wave at the largest jit shape
+                      (submit `wave` requests, pad, score, fill
+                      responses) — the steady-state serving cost.  The
+                      derived column reports p50/p99 request latency
+                      and throughput over a sustained fixed-rate burst
+                      run, and asserts identity=PASS: batched wave
+                      outputs are bitwise equal to per-request
+                      unbatched scoring;
+  serve_single_req    the same requests served one-per-wave
+                      (wave_sizes=(1,)) — the per-request floor the
+                      batch amortizes; derived shows the batch
+                      speedup;
+  serve_hot_swap      loading a refreshed panel version from a
+                      MomentStore checkpoint (restore + refresh +
+                      prepare) and swapping it in — the store -> serve
+                      edge; derived confirms the served version
+                      advanced.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.config import CausalConfig
+from repro.data.causal_dgp import make_causal_data
+from repro.serve_effects import (
+    EffectServer,
+    ServingPanel,
+    panel_from_checkpoint,
+    score_single,
+)
+from repro.store import MomentStore
+from repro.sweep.spec import SweepSpec
+
+
+def _timeit(fn, reps: int = 3) -> float:
+    fn()  # warm-up/compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(n_requests=512, wave=64, n_day=2048, p=10, n_segments=8,
+        n_folds=3, row_block=512, key=None, csv=print, reps=3):
+    """Benchmark serving a store-fed panel at ``wave``-sized waves."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    data = make_causal_data(jax.random.fold_in(key, 7), 2 * n_day, p,
+                            effect=1.0, discrete_treatment=False)
+    sids = jax.random.randint(jax.random.fold_in(key, 1), (2 * n_day,),
+                              0, n_segments)
+    cfg = CausalConfig(n_folds=n_folds, inference="none",
+                      row_block=row_block, nuisance_t="ridge",
+                      discrete_treatment=False, cate_features=2)
+    spec = SweepSpec(n_segments=n_segments, columns=(("dml", cfg),))
+    tag = f"w{wave}_R{n_requests}_p{p}_E{n_segments}"
+
+    store = MomentStore(spec, n_features=p, key=key)
+    store.ingest(X=data.X[:n_day], y=data.y[:n_day], t=data.t[:n_day],
+                 segment_ids=sids[:n_day])
+    panel_v1 = ServingPanel.from_effect_panel(
+        store.refresh(), n_features=p, version=store.version)
+
+    rng = np.random.default_rng(0)
+    req_X = np.asarray(data.X[:n_requests], np.float32)
+    req_sids = rng.integers(0, n_segments, n_requests)
+
+    # --- one full wave at the jit shape (steady-state cost) ----------
+    srv = EffectServer(panel_v1, wave_sizes=(wave,),
+                       max_queue=max(2 * wave, n_requests))
+
+    def one_wave():
+        for i in range(wave):
+            srv.submit(req_X[i], int(req_sids[i]))
+        srv.step()
+
+    t_wave = _timeit(one_wave, reps)
+
+    # --- sustained fixed-rate burst run: latency SLOs + throughput ---
+    srv_run = EffectServer(panel_v1, wave_sizes=(wave,),
+                           max_queue=max(2 * wave, n_requests))
+    # the (wave, p) jit shape is already warm from the timed waves above
+    t0 = time.perf_counter()
+    for lo in range(0, n_requests, wave):  # one burst per wave period
+        for i in range(lo, min(lo + wave, n_requests)):
+            srv_run.submit(req_X[i], int(req_sids[i]))
+        srv_run.step()
+    srv_run.drain()
+    elapsed = time.perf_counter() - t0
+    lat = srv_run.snapshot()["histograms"]["serve.request_seconds"]
+    qps = n_requests / elapsed
+
+    # --- bitwise: batched waves == per-request unbatched scoring -----
+    responses = srv_run.score(req_X[:wave], req_sids[:wave])
+    identity = "PASS"
+    for i, r in enumerate(responses):
+        ref = jax.block_until_ready(
+            score_single(panel_v1, req_X[i], int(req_sids[i]), srv_run._z))
+        if r.cate != float(ref["cate"]) or r.ok != bool(ref["ok"]):
+            identity = "FAIL"
+            break
+
+    csv(f"serve_wave_{tag},{t_wave * 1e6:.1f},"
+        f"p50={lat['p50'] * 1e6:.0f}us_p99={lat['p99'] * 1e6:.0f}us_"
+        f"qps={qps:.0f} identity={identity}")
+
+    # --- per-request floor: one request per wave ---------------------
+    srv1 = EffectServer(panel_v1, wave_sizes=(1,), max_queue=2 * wave)
+
+    def single_req():
+        srv1.submit(req_X[0], int(req_sids[0]))
+        srv1.step()
+
+    t_single = _timeit(single_req, reps)
+    csv(f"serve_single_req_{tag},{t_single * 1e6:.1f},"
+        f"batch_amortization={wave * t_single / max(t_wave, 1e-9):.1f}x"
+        f"_at_w{wave}")
+
+    # --- hot-swap from a refreshed store checkpoint ------------------
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        manager = CheckpointManager(ckpt_dir, keep_latest=4)
+        store.save(manager)
+        store.ingest(X=data.X[n_day:], y=data.y[n_day:],
+                     t=data.t[n_day:], segment_ids=sids[n_day:])
+        v2 = store.save(manager)
+
+        shell = MomentStore(spec, n_features=p, key=key)  # warm shell
+
+        def hot_swap():
+            fresh = panel_from_checkpoint(manager, spec, p, key=key,
+                                          step=v2, store=shell)
+            srv.swap(fresh)
+
+        t_swap = _timeit(hot_swap, reps)
+        csv(f"serve_hot_swap_{tag},{t_swap * 1e6:.1f},"
+            f"served_version={srv.version} (restore+refresh+install)")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=512)
+    ap.add_argument("--wave", type=int, default=64)
+    ap.add_argument("--p", type=int, default=10)
+    ap.add_argument("--segments", type=int, default=8)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(n_requests=args.requests, wave=args.wave, p=args.p,
+        n_segments=args.segments)

@@ -2,8 +2,8 @@
 committed BENCH_baseline.json and fail on slowdowns past the threshold.
 
 Only entries whose name starts with a gated prefix participate
-(crossfit / bootstrap / final_stage / iv / sweep / kernel_seg_gram —
-the perf wins of PRs 1-7 this gate locks in); other entries are
+(crossfit / bootstrap / final_stage / iv / sweep / kernel_seg_gram /
+store / serve — the perf wins this gate locks in); other entries are
 informational.  A gated baseline
 entry MISSING from the new results also fails: silently dropping a
 benchmark is how regressions hide.
@@ -32,6 +32,7 @@ GATED_PREFIXES = (
     "sweep",
     "kernel_seg_gram",
     "store",
+    "serve",
 )
 
 

@@ -141,6 +141,16 @@ def main(argv=None):
     else:
         bench_store.run(csv=rec)
 
+    print("# --- effect serving: wave-batched scoring latency/QPS ---")
+    from benchmarks import bench_serve
+    if args.full:
+        bench_serve.run(n_requests=4096, wave=256, n_day=16_384, p=20,
+                        n_segments=64, csv=rec)
+    elif args.smoke:
+        bench_serve.run(n_requests=256, wave=64, n_day=2048, csv=rec)
+    else:
+        bench_serve.run(csv=rec)
+
     print("# --- observability: traced smoke run + cost audit ---")
     from benchmarks import bench_obs
     if args.smoke:

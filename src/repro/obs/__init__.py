@@ -23,7 +23,14 @@ execute the same compiled programs.
 # and crossfit (via a traced runtime); tracer=None everywhere is the
 # zero-overhead default.
 from repro.obs.audit import ChunkAudit, CostAudit
-from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    default_registry,
+    reset_default_registry,
+)
 from repro.obs.trace import Span, Tracer, maybe_span
 
 __all__ = [
@@ -35,5 +42,7 @@ __all__ = [
     "MetricsRegistry",
     "Span",
     "Tracer",
+    "default_registry",
     "maybe_span",
+    "reset_default_registry",
 ]

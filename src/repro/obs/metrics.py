@@ -22,6 +22,7 @@ buffers and never perturbs compilation.
 from __future__ import annotations
 
 import math
+import random
 from typing import Dict, List, Optional
 
 
@@ -51,18 +52,27 @@ class Gauge:
 
 class Histogram:
     """Value distribution with exact count/sum/min/max and percentiles
-    from a bounded reservoir (the first ``cap`` observations — enough
-    for per-chunk latencies, bounded for runtime-lifetime safety)."""
+    from a bounded reservoir (Algorithm-R uniform sample of ``cap``
+    observations — bounded for runtime-lifetime safety).
 
-    __slots__ = ("count", "total", "lo", "hi", "cap", "_values")
+    The reservoir is a *uniform* sample over the whole observation
+    stream, not a prefix: once full, observation ``i`` replaces a
+    random slot with probability ``cap / i``, so the percentiles of a
+    long-running server track the live distribution instead of
+    freezing on warm-up latencies.  Sampling is host-side and
+    deterministic per instance (seeded ``random.Random``); count / sum
+    / min / max stay exact regardless."""
 
-    def __init__(self, cap: int = 4096) -> None:
+    __slots__ = ("count", "total", "lo", "hi", "cap", "_values", "_rng")
+
+    def __init__(self, cap: int = 4096, seed: int = 0) -> None:
         self.count = 0
         self.total = 0.0
         self.lo = math.inf
         self.hi = -math.inf
         self.cap = int(cap)
         self._values: List[float] = []
+        self._rng = random.Random(seed)
 
     def observe(self, v: float) -> None:
         v = float(v)
@@ -72,6 +82,12 @@ class Histogram:
         self.hi = max(self.hi, v)
         if len(self._values) < self.cap:
             self._values.append(v)
+        else:
+            # Algorithm R: keep each of the count observations seen so
+            # far in the reservoir with equal probability cap/count
+            j = self._rng.randrange(self.count)
+            if j < self.cap:
+                self._values[j] = v
 
     @property
     def mean(self) -> float:
@@ -126,10 +142,10 @@ class MetricsRegistry:
             g = self._gauges[name] = Gauge()
         return g
 
-    def histogram(self, name: str, cap: int = 4096) -> Histogram:
+    def histogram(self, name: str, cap: int = 4096, seed: int = 0) -> Histogram:
         h = self._histograms.get(name)
         if h is None:
-            h = self._histograms[name] = Histogram(cap=cap)
+            h = self._histograms[name] = Histogram(cap=cap, seed=seed)
         return h
 
     def snapshot(self) -> Dict[str, Dict]:
@@ -166,3 +182,19 @@ def default_registry() -> MetricsRegistry:
     if _DEFAULT is None:
         _DEFAULT = MetricsRegistry()
     return _DEFAULT
+
+
+def reset_default_registry() -> None:
+    """Drop the process-wide registry (a fresh one is created on next
+    use).  Tests reset between cases so same-name counters can never
+    couple test order; long-lived processes can reset after shipping a
+    snapshot.  Holders of an old ``default_registry()`` handle keep
+    writing to the detached instance — callers that want the live one
+    re-call ``default_registry()`` (as all in-tree call sites do).
+
+    The serving layer does NOT live here: every ``EffectServer`` owns a
+    per-server ``MetricsRegistry`` so two servers in one process never
+    share a latency histogram.
+    """
+    global _DEFAULT
+    _DEFAULT = None

@@ -1,0 +1,57 @@
+"""repro.serve_effects — the online effect-serving layer.
+
+The estimation side of the repo (sweep / store) fits ONCE into an
+``EffectPanel``; an industrial deployment then has to *serve* those
+effects to product traffic — per-user CATE/uplift lookups at high QPS
+(the Netflix "Computational Causal Inference" framing: effect-serving
+is a first-class production workload, not an afterthought of fitting).
+
+Three pieces:
+
+  ``ServingPanel``  the immutable scoring artifact of one panel
+                    version — per-segment thetas/SEs/validity gathered
+                    out of an ``EffectPanel`` (from ``repro.sweep`` or
+                    ``MomentStore.refresh()``), loadable from a
+                    ``repro.checkpoint`` snapshot with the store's
+                    provenance checks (``panel_from_checkpoint``);
+  ``scoring``       the jitted wave scorer — ``phi(x) · thetas[sid]``
+                    per row with analytic CI bands from the stored
+                    SEs; batching is a ``vmap`` of the row scorer, so
+                    padded slots are certified no-ops and batched
+                    scoring is bitwise the unbatched row score;
+  ``EffectServer``  the admission queue + continuous wave batching +
+                    versioned hot-swap server: requests coalesce into
+                    a small fixed ladder of jit shapes (pad-and-mask,
+                    ``sid = -1`` padding like ``seg_gram``'s
+                    ``seg=-1`` rows), every wave scores against
+                    exactly ONE panel version, ``swap``/``rollback``
+                    exchange refreshed versions between waves, and a
+                    per-server ``MetricsRegistry`` (never the process
+                    global) carries the p50/p99 latency, wave, and
+                    occupancy histograms.
+
+See README "Serving" and docs/ARCHITECTURE.md for the store → serve
+dataflow; ``benchmarks/bench_serve.py`` gates latency/throughput in CI.
+"""
+
+from repro.serve_effects.panel import ServingPanel, panel_from_checkpoint
+from repro.serve_effects.scoring import score_rows, score_single
+from repro.serve_effects.server import (
+    EffectServer,
+    QueueFull,
+    Request,
+    Response,
+    Ticket,
+)
+
+__all__ = [
+    "EffectServer",
+    "QueueFull",
+    "Request",
+    "Response",
+    "ServingPanel",
+    "Ticket",
+    "panel_from_checkpoint",
+    "score_rows",
+    "score_single",
+]

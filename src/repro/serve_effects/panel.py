@@ -1,0 +1,120 @@
+"""ServingPanel: the immutable scoring artifact of one panel version.
+
+A server never scores against a live ``EffectPanel`` — it scores
+against a *prepared* snapshot of one estimator column: the per-segment
+effect coefficients, their standard errors, and the per-segment
+validity mask, stamped with the version they came from.  Preparing the
+artifact once (gather, dtype-fix, ok-mask materialization) keeps the
+hot path free of host-side panel plumbing, and making it immutable is
+what makes hot-swap atomic: installing a new version is one reference
+assignment, and every in-flight wave keeps the reference it captured.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+_F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingPanel:
+    """One servable panel version: column ``column`` of an EffectPanel.
+
+    thetas / ses are (E, pf) per-segment effect coefficients and their
+    standard errors; ``ok`` is the (E,) per-segment validity mask
+    (zero-row or non-finite cells serve flagged responses, never NaN).
+    ``aligned`` carries the store column's ingest regime (None for
+    sweep-fitted panels); ``version`` is the store/checkpoint version
+    the estimates came from.
+    """
+
+    thetas: Array  # (E, pf)
+    ses: Array  # (E, pf)
+    ok: Array  # (E,) bool
+    n_features: int  # expected request feature width p
+    cate_features: int  # pf of phi(x) (1 => constant effect)
+    version: int = 0
+    column: str = ""  # estimator name, provenance only
+    aligned: Optional[bool] = None
+
+    @property
+    def n_segments(self) -> int:
+        """Number of segments E this panel serves."""
+        return int(self.thetas.shape[0])
+
+    @classmethod
+    def from_effect_panel(
+        cls,
+        panel,
+        *,
+        n_features: int,
+        column: int = 0,
+        version: int = 0,
+    ) -> "ServingPanel":
+        """Prepare column ``column`` of ``panel`` for serving.
+
+        Fails loudly on a failed column — a server must not silently
+        serve a column that carries no estimates.
+        """
+        col = panel.columns[column]
+        if col.failed or col.thetas is None:
+            raise ValueError(
+                f"serve: column {column} ({col.estimator!r}) failed and "
+                f"carries no estimates: {col.error}"
+            )
+        thetas = jnp.asarray(col.thetas, _F32)
+        if col.ses is not None:
+            ses = jnp.asarray(col.ses, _F32)
+        else:
+            ses = jnp.zeros_like(thetas)
+        return cls(
+            thetas=thetas,
+            ses=ses,
+            ok=col.ok(panel.counts),
+            n_features=int(n_features),
+            cate_features=int(thetas.shape[1]),
+            version=int(version),
+            column=col.estimator,
+            aligned=col.aligned,
+        )
+
+
+def panel_from_checkpoint(
+    manager,
+    spec,
+    n_features: int,
+    *,
+    key=None,
+    column: int = 0,
+    step: Optional[int] = None,
+    store=None,
+    tracer=None,
+) -> ServingPanel:
+    """Load a servable panel version from a ``MomentStore`` snapshot.
+
+    Builds a store shell for ``spec`` (or reuses ``store`` — a warm
+    shell keeps its refresh jit cache, which is what makes a periodic
+    hot-swap loop recompile-free), restores snapshot ``step`` (latest
+    if None) through ``repro.checkpoint`` — inheriting the store's
+    provenance checks, so a snapshot from a different column set or
+    feature width fails loudly — then refreshes and prepares column
+    ``column``.  This is the ingest → refresh → serve hot-swap edge:
+    the PR-8 daily-ingest loop writes versions, the server pulls them.
+    """
+    from repro.store import MomentStore
+
+    if store is None:
+        store = MomentStore(spec, n_features=n_features, key=key, tracer=tracer)
+    store.restore(manager, step=step)
+    return ServingPanel.from_effect_panel(
+        store.refresh(),
+        n_features=n_features,
+        column=column,
+        version=store.version,
+    )

@@ -1,0 +1,118 @@
+"""The jitted scoring kernel: ``phi(x) · thetas[segment]`` per row.
+
+Structure is everything here:
+
+  * The batch scorer is ``vmap`` of a single-row scorer.  Every
+    statistic of row i (basis build, theta gather, effect dot product,
+    SE band) involves ONLY row i, so batching cannot change any row's
+    bits — which is what certifies (a) padded slots as no-ops and
+    (b) wave-batched scoring ≡ per-request unbatched scoring, bitwise
+    (tests/test_serve_effects.py, at the canonical wave shapes).
+  * Padded slots follow the ``seg_gram`` convention: ``sid = -1``.
+    An out-of-range segment id scores against clamped index 0 but is
+    masked ``ok = False`` and zeroed on the way out, exactly like the
+    kernel's ``seg=-1/w=0`` rows.
+  * Failed panel cells (``ok[sid] = False`` — zero-row segments,
+    non-finite solves) return a *flagged* response: ``ok = False`` and
+    zeroed effect/CI fields, never NaN — NaN thetas are masked out by
+    the same ``where``.
+
+CI bands are analytic from the stored per-coefficient SEs under the
+diagonal approximation ``se(phi·theta)² ≈ Σ_a phi_a² se_a²`` (the
+panel stores SEs, not full covariance; for ``pf = 1`` — the common
+ATE-per-segment panel — this is exact).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+_F32 = jnp.float32
+
+
+def _row_phi(x: Array, pf: int) -> Array:
+    """phi of ONE row: [1] or [1, x_0..x_{pf-2}] — cate_basis, unbatched."""
+    one = jnp.ones((1,), _F32)
+    if pf <= 1:
+        return one
+    return jnp.concatenate([one, x[: pf - 1].astype(_F32)])
+
+
+def _score_row(
+    thetas: Array,
+    ses: Array,
+    ok: Array,
+    x: Array,
+    sid: Array,
+    z: Array,
+) -> Dict[str, Array]:
+    """Score one request against one panel version (all scalars out)."""
+    n_segments = thetas.shape[0]
+    valid = (sid >= 0) & (sid < n_segments)
+    s = jnp.clip(sid, 0, n_segments - 1)
+    phi = _row_phi(x, thetas.shape[1])
+    cate = (phi * thetas[s]).sum()
+    band = jnp.sqrt(jnp.clip((phi * phi * ses[s] * ses[s]).sum(), 0.0, None))
+    good = valid & ok[s] & jnp.isfinite(cate)
+    zero = jnp.zeros((), _F32)
+    return {
+        "cate": jnp.where(good, cate, zero),
+        "lo": jnp.where(good, cate - z * band, zero),
+        "hi": jnp.where(good, cate + z * band, zero),
+        "se": jnp.where(good, band, zero),
+        "ok": good,
+    }
+
+
+def score_rows(
+    thetas: Array,
+    ses: Array,
+    ok: Array,
+    X: Array,
+    sids: Array,
+    z: Array,
+) -> Dict[str, Array]:
+    """Score a wave: X (W, p), sids (W,) int32 (-1 = padded slot).
+
+    A ``vmap`` of the row scorer — see the module docstring for why
+    that shape is the certification.  Returns (W,) arrays.
+    """
+    fn = jax.vmap(_score_row, in_axes=(None, None, None, 0, 0, None))
+    return fn(thetas, ses, ok, X, sids, z)
+
+
+# jit caches on shapes: one compile per (wave size, panel shape) pair —
+# the server's fixed wave-size ladder makes that a small closed set,
+# and hot-swapping to a same-shape refreshed panel reuses the compile.
+_score_rows_jit = jax.jit(score_rows)
+_score_row_jit = jax.jit(_score_row)
+
+
+def score_batch(panel, X: Array, sids: Array, z: float) -> Dict[str, Array]:
+    """Jitted wave entry point used by the server: panel is a
+    ``ServingPanel``; z the CI critical value."""
+    return _score_rows_jit(
+        panel.thetas,
+        panel.ses,
+        panel.ok,
+        jnp.asarray(X, _F32),
+        jnp.asarray(sids, jnp.int32),
+        jnp.asarray(z, _F32),
+    )
+
+
+def score_single(panel, x: Array, segment_id: int, z: float) -> Dict[str, Array]:
+    """Unbatched reference scorer: ONE request, no wave, no padding —
+    the bitwise yardstick batched serving is certified against."""
+    return _score_row_jit(
+        panel.thetas,
+        panel.ses,
+        panel.ok,
+        jnp.asarray(x, _F32),
+        jnp.asarray(segment_id, jnp.int32),
+        jnp.asarray(z, _F32),
+    )

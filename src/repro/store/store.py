@@ -20,8 +20,11 @@ Contracts (certified by tests/test_store.py):
     fixed-order block-fold of ``moments.blocked_reduce`` seeded with
     the standing accumulator (``init=``) plus the index-keyed fold
     assignment below.  Misaligned ingests and ``row_block = 0`` remain
-    correct but only tolerance-equal; ``store.aligned`` reports which
-    regime the store is in.
+    correct but only tolerance-equal; alignment is tracked PER COLUMN
+    (``store.column_aligned``, plus each refreshed ``ColumnResult``'s
+    ``aligned`` flag — one misaligned ingest into one column never
+    downgrades a neighbor's reported regime), with ``store.aligned``
+    as the all-columns rollup.
   * **Streaming-stable folds** — a row's fold is
     ``randint(fold_in(column_key, global_row_index), k)``: it depends
     only on the row's global arrival index, never on rows that arrive
@@ -102,6 +105,7 @@ class _Column:
     layout: Optional[ColumnLayout]
     state: Optional[store_stats.State]
     error: Optional[str]
+    aligned: bool = True  # per-column: no misaligned ingest yet
 
 
 class MomentStore:
@@ -122,7 +126,6 @@ class MomentStore:
         self.n_total = 0
         self.n_ingests = 0
         self.version = 0
-        self.aligned = True
         self.seg_counts = jnp.zeros((spec.n_segments,), _F32)
         self._cols: List[_Column] = []
         self._jit_cache: Dict[Any, Any] = {}
@@ -143,6 +146,23 @@ class MomentStore:
                                            spec.n_segments * layout.k)
             self._cols.append(_Column(name, cfg, rspec, layout, state,
                                       None))
+
+    # ------------------------------------------------------------------
+    # Alignment regime (per column — one misaligned ingest into one
+    # column must not downgrade its neighbors' reported regime)
+    # ------------------------------------------------------------------
+    @property
+    def column_aligned(self) -> Tuple[Optional[bool], ...]:
+        """Per-column alignment: True = every ingest of that column
+        ended on its ``row_block`` boundary (bitwise-ingest regime),
+        False = tolerance regime, None = unsupported column."""
+        return tuple(None if c.layout is None else c.aligned
+                     for c in self._cols)
+
+    @property
+    def aligned(self) -> bool:
+        """Store-wide rollup: every supported column still bitwise."""
+        return all(c.aligned for c in self._cols if c.layout is not None)
 
     # ------------------------------------------------------------------
     # Fold lineage
@@ -188,10 +208,12 @@ class MomentStore:
                         continue
                     rb = col.cfg.row_block
                     if rb > 0 and self.n_total % rb != 0:
-                        # prior ingests broke block alignment: still
-                        # correct, but the bitwise contract degrades
-                        # to tolerance from here on
-                        self.aligned = False
+                        # prior ingests broke THIS column's block
+                        # alignment: still correct, but its bitwise
+                        # contract degrades to tolerance from here on
+                        # (columns with a different row_block keep
+                        # their own regime)
+                        col.aligned = False
                     fn = self._ingest_fn(i)
                     args = (col.state, X, t, y, segment_ids,
                             jnp.uint32(self.n_total),
@@ -250,7 +272,7 @@ class MomentStore:
                 columns.append(ColumnResult(
                     estimator=col.name, cfg=col.cfg,
                     thetas=out["theta"], ates=out["ate"], ses=out["se"],
-                    key_index=i, events=tag))
+                    key_index=i, events=tag, aligned=col.aligned))
             panel = EffectPanel(columns=tuple(columns),
                                 counts=self.seg_counts,
                                 n_segments=self.spec.n_segments,
@@ -288,6 +310,7 @@ class MomentStore:
             "n_total": self.n_total,
             "n_ingests": self.n_ingests,
             "aligned": self.aligned,
+            "column_aligned": list(self.column_aligned),
             "n_features": self.n_features,
             "n_segments": self.spec.n_segments,
             "segment_key": self.spec.segment_key,
@@ -325,7 +348,14 @@ class MomentStore:
         self.version = int(meta["step"])
         self.n_total = int(extra.get("n_total", 0))
         self.n_ingests = int(extra.get("n_ingests", 0))
-        self.aligned = bool(extra.get("aligned", True))
+        # per-column flags when present; older snapshots carried only
+        # the store-wide bool, which broadcasts conservatively
+        col_aligned = extra.get(
+            "column_aligned",
+            [bool(extra.get("aligned", True))] * len(self._cols))
+        for col, flag in zip(self._cols, col_aligned):
+            if col.layout is not None:
+                col.aligned = bool(flag)
         return self
 
 

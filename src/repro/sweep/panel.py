@@ -36,6 +36,11 @@ class ColumnResult:
     shared_nuisance: bool = False  # residuals reused from key_index
     events: Tuple[str, ...] = ()  # runtime chunk/downgrade events
     error: Optional[str] = None
+    # store-refreshed columns only: True = every ingest of this column
+    # ended on a row_block boundary (bitwise regime), False = at least
+    # one misaligned ingest (tolerance regime), None = not applicable
+    # (sweep columns, failed columns)
+    aligned: Optional[bool] = None
 
     @property
     def failed(self) -> bool:
@@ -106,6 +111,8 @@ class EffectPanel:
             denom = jnp.maximum(good.sum(), 1)
             mean = float(jnp.where(good, ates, 0.0).sum() / denom)
             tag = " (shared nuisances)" if col.shared_nuisance else ""
+            if col.aligned is False:
+                tag += " (misaligned ingest: tolerance regime)"
             lines.append(
                 f"[{j}] {col.estimator} p_phi={col.cfg.cate_features}: "
                 f"mean ATE {mean:+.4f} over {int(good.sum())} segments{tag}"

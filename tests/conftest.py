@@ -19,6 +19,21 @@ def _clear_jax_caches_per_module():
     jax.clear_caches()
 
 
+@pytest.fixture(autouse=True)
+def _reset_default_metrics_registry():
+    """Fresh process-global metrics registry per test.
+
+    ``obs.metrics.default_registry()`` is a process-wide singleton
+    (trace-time instrumentation can't thread a handle); without a reset
+    any two tests touching a same-name counter couple through test
+    order.  Counts within one test remain visible — instrumentation
+    re-resolves ``default_registry()`` on every increment."""
+    from repro.obs.metrics import reset_default_registry
+
+    reset_default_registry()
+    yield
+
+
 @pytest.fixture
 def key():
     return jax.random.PRNGKey(0)

@@ -55,9 +55,52 @@ def test_histogram_percentiles_and_reservoir_cap():
     # exact stats survive past the reservoir cap
     assert h.count == 100 and h.hi == 99.0 and h.lo == 0.0
     assert len(h._values) == 10  # bounded
-    assert h.percentile(0.0) == 0.0
-    assert h.percentile(1.0) == 9.0  # reservoir holds first 10
+    # the reservoir is a sample of the stream, not a warm-up prefix
+    assert all(0.0 <= v <= 99.0 for v in h._values)
+    assert h.percentile(0.0) <= h.percentile(0.5) <= h.percentile(1.0)
     assert Histogram().summary() == {"count": 0, "sum": 0.0}
+
+
+def test_histogram_reservoir_tracks_shifted_distribution():
+    # the long-running-server regression: latencies shift AFTER the
+    # reservoir fills; percentiles must follow the live distribution
+    # instead of freezing on the first `cap` (warm-up) observations
+    cap = 64
+    h = Histogram(cap=cap)
+    for _ in range(cap):
+        h.observe(1.0)           # warm-up regime fills the reservoir
+    assert h.percentile(0.5) == 1.0
+    for _ in range(20 * cap):
+        h.observe(10.0)          # steady-state regime, post-cap
+    assert h.percentile(0.5) == 10.0   # p50 follows the shift
+    assert h.percentile(0.99) == 10.0
+    # exact aggregates never degrade to the sample
+    assert h.count == 21 * cap
+    assert h.total == cap * 1.0 + 20 * cap * 10.0
+    assert h.lo == 1.0 and h.hi == 10.0
+    assert len(h._values) == cap
+
+
+def test_histogram_reservoir_deterministic_seed():
+    def fill(seed):
+        h = Histogram(cap=8, seed=seed)
+        for v in range(1000):
+            h.observe(float(v))
+        return list(h._values)
+
+    assert fill(0) == fill(0)        # seeded Algorithm R replays
+    assert fill(0) != fill(1)
+
+
+def test_reset_default_registry_decouples_tests():
+    from repro.obs.metrics import default_registry, reset_default_registry
+
+    default_registry().counter("coupling.probe").inc(3)
+    assert default_registry().snapshot()["counters"]["coupling.probe"] == 3
+    reset_default_registry()
+    fresh = default_registry()
+    assert "coupling.probe" not in fresh.snapshot()["counters"]
+    assert default_registry() is fresh  # stable until the next reset
 
 
 def test_registry_get_or_create_is_stable():

@@ -1,0 +1,323 @@
+"""repro.serve_effects certification: the online serving layer.
+
+Contracts:
+  * batched wave scoring (pad-and-mask, any wave shape in the ladder)
+    is BITWISE identical to per-request unbatched scoring, and padded
+    slots are certified no-ops (flagged zeros that cannot perturb real
+    rows);
+  * every request scores against exactly ONE panel version — a
+    hot-swap between waves changes the served estimates without
+    dropping or mixing in-flight waves, and rollback re-installs the
+    previous version bit-for-bit;
+  * the ingest → refresh → save → serve edge: a server loads panel
+    versions from ``MomentStore`` checkpoints (provenance-checked) and
+    swaps between them;
+  * failed (``ok=False``) cells and out-of-range segment ids return
+    flagged responses, never NaN;
+  * edge cases: empty wave, single request, queue overflow
+    backpressure;
+  * observability is per-server (never the process-global registry):
+    latency/occupancy histograms fill, waves emit obs spans, and
+    tracing changes no bits.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.config import CausalConfig
+from repro.core.registry import ROW_BLOCK
+from repro.data.causal_dgp import make_causal_data
+from repro.obs.metrics import MetricsRegistry, default_registry
+from repro.obs.trace import Tracer
+from repro.serve_effects import (
+    EffectServer,
+    QueueFull,
+    ServingPanel,
+    panel_from_checkpoint,
+    score_single,
+)
+from repro.store import MomentStore
+from repro.sweep.spec import SweepSpec
+
+N, E, P = 1100, 5, 6
+_SKEY = jax.random.PRNGKey(11)
+
+
+def _cfg() -> CausalConfig:
+    return CausalConfig(
+        n_folds=3, inference="none", row_block=ROW_BLOCK,
+        nuisance_t="ridge", discrete_treatment=False, cate_features=2)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_causal_data(jax.random.PRNGKey(42), N, P, effect=1.2,
+                            discrete_treatment=False)
+
+
+@pytest.fixture(scope="module")
+def sids():
+    return jax.random.randint(jax.random.PRNGKey(9), (N,), 0, E)
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return SweepSpec(n_segments=E, columns=(("dml", _cfg()),))
+
+
+@pytest.fixture(scope="module")
+def store(spec, data, sids):
+    s = MomentStore(spec, n_features=P, key=_SKEY)
+    s.ingest(X=data.X, y=data.y, t=data.t, segment_ids=sids)
+    return s
+
+
+@pytest.fixture(scope="module")
+def panel(store):
+    return ServingPanel.from_effect_panel(
+        store.refresh(), n_features=P, version=store.version)
+
+
+def _server(panel, **kw):
+    kw.setdefault("wave_sizes", (4, 16))
+    kw.setdefault("max_queue", 64)
+    return EffectServer(panel, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Bitwise: batched-with-padding ≡ unbatched, padded slots are no-ops.
+# ---------------------------------------------------------------------------
+
+def test_batched_scoring_bitwise_unbatched(panel, data, sids):
+    srv = _server(panel)
+    X = np.asarray(data.X[:5])                # 5 real rows -> wave of 16
+    ids = np.asarray(sids[:5])
+    responses = srv.score(X, ids)
+    for i, r in enumerate(responses):
+        ref = jax.block_until_ready(
+            score_single(panel, X[i], int(ids[i]), srv._z))
+        assert r.cate == float(ref["cate"])
+        assert r.lo == float(ref["lo"]) and r.hi == float(ref["hi"])
+        assert r.se == float(ref["se"]) and r.ok == bool(ref["ok"])
+        assert r.version == panel.version
+
+
+def test_wave_shape_invariance_bitwise(panel, data, sids):
+    # the same request served through different wave shapes (different
+    # jit programs, different padding) produces identical bits
+    X, ids = np.asarray(data.X[:3]), np.asarray(sids[:3])
+    small = _server(panel, wave_sizes=(4,)).score(X, ids)
+    large = _server(panel, wave_sizes=(16,)).score(X, ids)
+    ones = _server(panel, wave_sizes=(1,)).score(X, ids)
+    for a, b, c in zip(small, large, ones):
+        assert (a.cate, a.lo, a.hi, a.se, a.ok) \
+            == (b.cate, b.lo, b.hi, b.se, b.ok) \
+            == (c.cate, c.lo, c.hi, c.se, c.ok)
+
+
+def test_padded_slots_are_flagged_noops(panel, data):
+    from repro.serve_effects.scoring import score_batch
+
+    X = np.zeros((8, P), np.float32)
+    X[0] = np.asarray(data.X[0])
+    sids_wave = np.full((8,), -1, np.int32)   # 7 padded slots
+    sids_wave[0] = 2
+    out = {k: np.asarray(v) for k, v in jax.block_until_ready(
+        score_batch(panel, X, sids_wave, 1.96)).items()}
+    assert not out["ok"][1:].any()
+    np.testing.assert_array_equal(out["cate"][1:], 0.0)
+    np.testing.assert_array_equal(out["lo"][1:], 0.0)
+    # and garbage in the padded slots cannot perturb the real row
+    X2 = X.copy()
+    X2[1:] = 1e30
+    out2 = {k: np.asarray(v) for k, v in jax.block_until_ready(
+        score_batch(panel, X2, sids_wave, 1.96)).items()}
+    for k in ("cate", "lo", "hi", "se", "ok"):
+        assert out[k][0] == out2[k][0]
+
+
+# ---------------------------------------------------------------------------
+# Edge cases: empty wave, single request, backpressure.
+# ---------------------------------------------------------------------------
+
+def test_empty_wave_is_noop(panel):
+    srv = _server(panel)
+    assert srv.step() == []
+    assert srv.drain() == []
+    assert srv.snapshot()["counters"].get("serve.waves", 0) == 0
+
+
+def test_single_request(panel, data):
+    srv = _server(panel)
+    t = srv.submit(np.asarray(data.X[0]), 1)
+    assert not t.done and srv.queue_depth == 1
+    (served,) = srv.step()
+    assert served is t and t.done and srv.queue_depth == 0
+    assert np.isfinite(t.response.cate)
+    assert t.response.lo <= t.response.cate <= t.response.hi
+    assert t.response.latency_s > 0
+
+
+def test_queue_overflow_backpressure(panel, data):
+    srv = _server(panel, wave_sizes=(4,), max_queue=8)
+    x = np.asarray(data.X[0])
+    for _ in range(8):
+        srv.submit(x, 0)
+    with pytest.raises(QueueFull):
+        srv.submit(x, 0)
+    assert srv.snapshot()["counters"]["serve.rejected"] == 1
+    # draining relieves the backpressure; nothing admitted was dropped
+    served = srv.drain()
+    assert len(served) == 8 and all(t.done for t in served)
+    srv.submit(x, 0)
+
+
+def test_bad_request_shape_rejected(panel):
+    srv = _server(panel)
+    with pytest.raises(ValueError, match="request x"):
+        srv.submit(np.zeros((P + 1,), np.float32), 0)
+
+
+# ---------------------------------------------------------------------------
+# Flagged responses: failed cells, out-of-range segments — never NaN.
+# ---------------------------------------------------------------------------
+
+def test_failed_cell_returns_flagged_response(data):
+    sids0 = jnp.zeros((N,), jnp.int32)        # segments 1, 2 have no rows
+    spec0 = SweepSpec(n_segments=3, columns=(("dml", _cfg()),))
+    s = MomentStore(spec0, n_features=P, key=_SKEY)
+    s.ingest(X=data.X, y=data.y, t=data.t, segment_ids=sids0)
+    sp = ServingPanel.from_effect_panel(s.refresh(), n_features=P,
+                                        version=s.version)
+    srv = _server(sp)
+    good, bad = srv.score(np.asarray(data.X[:2]), np.asarray([0, 1]))
+    assert good.ok and np.isfinite(good.cate)
+    assert not bad.ok
+    assert (bad.cate, bad.lo, bad.hi, bad.se) == (0.0, 0.0, 0.0, 0.0)
+
+
+def test_out_of_range_segment_flagged(panel, data):
+    srv = _server(panel)
+    lo, hi = srv.score(np.asarray(data.X[:2]), np.asarray([-3, E + 7]))
+    for r in (lo, hi):
+        assert not r.ok and r.cate == 0.0 and not np.isnan(r.cate)
+
+
+def test_failed_column_rejected_at_prepare(store):
+    panel = store.refresh()
+    bad = SweepSpec(n_segments=E, columns=(("drlearner", _cfg()),))
+    s = MomentStore(bad, n_features=P, key=_SKEY)  # unsupported -> failed
+    with pytest.raises(ValueError, match="failed"):
+        ServingPanel.from_effect_panel(s.refresh(), n_features=P)
+    assert panel.columns[0].error is None  # sanity: the good one serves
+
+
+# ---------------------------------------------------------------------------
+# Hot-swap: one version per wave, checkpoint wiring, rollback.
+# ---------------------------------------------------------------------------
+
+def test_hot_swap_one_version_per_wave_never_mixed(spec, data, sids):
+    s = MomentStore(spec, n_features=P, key=_SKEY)
+    s.ingest(X=data.X[:512], y=data.y[:512], t=data.t[:512],
+             segment_ids=sids[:512])
+    p1 = ServingPanel.from_effect_panel(s.refresh(), n_features=P,
+                                        version=s.version)
+    s.ingest(X=data.X[512:], y=data.y[512:], t=data.t[512:],
+             segment_ids=sids[512:])
+    p2 = ServingPanel.from_effect_panel(s.refresh(), n_features=P,
+                                        version=s.version)
+    srv = _server(p1, wave_sizes=(4,), max_queue=64)
+    x = np.asarray(data.X[0])
+    tickets = [srv.submit(x, 1) for _ in range(8)]  # two waves queued
+    wave1 = srv.step()
+    srv.swap(p2)          # arrives while wave 2's requests sit queued
+    wave2 = srv.step()
+    v1 = {t.response.version for t in wave1}
+    v2 = {t.response.version for t in wave2}
+    assert v1 == {p1.version} and v2 == {p2.version}
+    assert len(wave1) + len(wave2) == len(tickets)  # nothing dropped
+    assert all(t.done for t in tickets)
+    # the swap changed the served estimate for an identical request
+    assert wave1[0].response.cate != wave2[0].response.cate
+
+
+def test_hot_swap_from_store_checkpoints(tmp_path, spec, data, sids):
+    manager = CheckpointManager(str(tmp_path), keep_latest=8)
+    s = MomentStore(spec, n_features=P, key=_SKEY)
+    s.ingest(X=data.X[:512], y=data.y[:512], t=data.t[:512],
+             segment_ids=sids[:512])
+    v1 = s.save(manager)
+    s.ingest(X=data.X[512:], y=data.y[512:], t=data.t[512:],
+             segment_ids=sids[512:])
+    v2 = s.save(manager)
+
+    p1 = panel_from_checkpoint(manager, spec, P, key=_SKEY, step=v1)
+    srv = _server(p1)
+    x, sid = np.asarray(data.X[3]), 2
+    r1 = srv.score(x[None], [sid])[0]
+    assert r1.version == v1
+
+    latest = panel_from_checkpoint(manager, spec, P, key=_SKEY)  # = v2
+    srv.swap(latest)
+    r2 = srv.score(x[None], [sid])[0]
+    assert r2.version == v2 and r2.cate != r1.cate
+
+    rolled = srv.rollback()
+    assert rolled.version == v1
+    r3 = srv.score(x[None], [sid])[0]
+    assert r3.version == v1 and r3.cate == r1.cate  # bitwise round-trip
+    assert srv.snapshot()["counters"]["serve.swaps"] == 1
+    assert srv.snapshot()["counters"]["serve.rollbacks"] == 1
+
+
+def test_checkpoint_provenance_enforced(tmp_path, spec, data, sids):
+    manager = CheckpointManager(str(tmp_path), keep_latest=8)
+    s = MomentStore(spec, n_features=P, key=_SKEY)
+    s.ingest(X=data.X, y=data.y, t=data.t, segment_ids=sids)
+    s.save(manager)
+    other = SweepSpec(n_segments=E, columns=(("dml_loo", _cfg()),))
+    with pytest.raises(ValueError, match="columns"):
+        panel_from_checkpoint(manager, other, P, key=_SKEY)
+
+
+def test_rollback_without_history_raises(panel):
+    with pytest.raises(RuntimeError, match="roll back"):
+        _server(panel).rollback()
+
+
+# ---------------------------------------------------------------------------
+# Observability: per-server registry, histograms, spans, no perturbation.
+# ---------------------------------------------------------------------------
+
+def test_metrics_are_per_server_never_global(panel, data, sids):
+    a, b = _server(panel), _server(panel)
+    a.score(np.asarray(data.X[:6]), np.asarray(sids[:6]))
+    snap_a, snap_b = a.snapshot(), b.snapshot()
+    assert snap_a["counters"]["serve.requests"] == 6
+    assert "serve.requests" not in snap_b["counters"]
+    assert "serve.requests" not in default_registry().snapshot()["counters"]
+    hist = snap_a["histograms"]["serve.request_seconds"]
+    assert hist["count"] == 6 and hist["p99"] >= hist["p50"] > 0
+    occ = snap_a["histograms"]["serve.batch_occupancy"]
+    assert 0 < occ["max"] <= 1.0
+    # an injected registry is used as-is
+    reg = MetricsRegistry()
+    c = _server(panel, registry=reg)
+    c.score(np.asarray(data.X[:1]), np.asarray(sids[:1]))
+    assert reg.snapshot()["counters"]["serve.requests"] == 1
+
+
+def test_wave_spans_and_bit_identity_under_tracing(panel, data, sids):
+    X, ids = np.asarray(data.X[:9]), np.asarray(sids[:9])
+    tracer = Tracer()
+    traced = _server(panel, tracer=tracer).score(X, ids)
+    plain = _server(panel).score(X, ids)
+    waves = [s for s in tracer.spans if s.name == "serve.wave"]
+    assert waves and waves[0].attrs["version"] == panel.version
+    assert sum(s.attrs["fill"] for s in waves) == 9
+    for a, b in zip(traced, plain):
+        assert (a.cate, a.lo, a.hi, a.se, a.ok) \
+            == (b.cate, b.lo, b.hi, b.se, b.ok)

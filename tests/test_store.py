@@ -22,6 +22,8 @@ Contracts:
   * ingest/refresh emit obs spans and metrics, and tracing changes no
     bits.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -186,12 +188,59 @@ def test_misaligned_ingest_flags_tolerance_regime(data, sids):
     kw = _arrays("dml", data, None, sids)
     s = _ingest_partition(spec, kw, (300,))  # not a ROW_BLOCK multiple
     assert not s.aligned
+    assert s.column_aligned == (False,)
     # still numerically the same estimator
     full = _ingest_partition(spec, kw, ())
     np.testing.assert_allclose(
         np.asarray(s.refresh().columns[0].thetas),
         np.asarray(full.refresh().columns[0].thetas),
         rtol=2e-4, atol=2e-4)
+
+
+def test_alignment_is_per_column(tmp_path, data, sids):
+    # one misaligned ingest into ONE column must not downgrade the
+    # whole store's reported regime: a column whose row_block divides
+    # every ingest boundary stays bitwise-certified next to a
+    # misaligned neighbor
+    cfg_a = _cfg("dml")                                   # rb = ROW_BLOCK
+    cfg_b = dataclasses.replace(_cfg("dml"), row_block=3 * ROW_BLOCK // 4)
+    spec = SweepSpec(n_segments=E,
+                     columns=(("dml", cfg_a), ("dml", cfg_b)))
+    kw = _arrays("dml", data, None, sids)
+    # split at 2*ROW_BLOCK: a boundary for cfg_a, misaligned for cfg_b
+    s = _ingest_partition(spec, kw, (2 * ROW_BLOCK,))
+    assert s.column_aligned == (True, False)
+    assert not s.aligned                     # rollup reports any-degraded
+    panel = s.refresh()
+    assert panel.columns[0].aligned is True
+    assert panel.columns[1].aligned is False
+    assert "misaligned" in panel.summary()
+    # the aligned column keeps the bitwise contract vs a one-shot build
+    full = _ingest_partition(spec, kw, ())
+    assert full.column_aligned == (True, True)
+    np.testing.assert_array_equal(
+        np.asarray(panel.columns[0].thetas),
+        np.asarray(full.refresh().columns[0].thetas))
+    # the misaligned neighbor is tolerance-equal, as before
+    np.testing.assert_allclose(
+        np.asarray(panel.columns[1].thetas),
+        np.asarray(full.refresh().columns[1].thetas),
+        rtol=2e-4, atol=2e-4)
+    # per-column flags survive a save/restore round-trip via extras
+    manager = CheckpointManager(str(tmp_path), keep_latest=4)
+    s.save(manager)
+    meta_extra = manager.restore(s.state_dict())[1]["extra"]
+    assert meta_extra["column_aligned"] == [True, False]
+    assert meta_extra["aligned"] is False
+    restored = MomentStore(spec, n_features=P, key=_SKEY)
+    restored.restore(manager)
+    assert restored.column_aligned == (True, False)
+    # unsupported columns report None (no alignment regime to certify)
+    spec_u = SweepSpec(n_segments=E, columns=(
+        ("dml", cfg_a), ("drlearner", _cfg("drlearner"))))
+    u = _ingest_partition(spec_u, kw, ())
+    assert u.column_aligned == (True, None)
+    assert u.aligned
 
 
 def test_fold_assignment_streaming_stable(data, sids):
