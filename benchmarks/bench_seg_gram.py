@@ -52,7 +52,40 @@ def run(n=16_384, q=12, n_segments=192, row_block=1024, csv=print, reps=5):
     csv(f"kernel_seg_gram_onehot_{tag},{t_oh*1e6:.0f},baseline")
     csv(f"kernel_seg_gram_{sg_ops.default_backend()}_{tag},"
         f"{t_fused*1e6:.0f},speedup={t_oh/max(t_fused, 1e-12):.2f}x")
-    return {"onehot": t_oh, "fused": t_fused}
+
+    # The two newest fused builders (fold_weighted_gram's dense (k, n)
+    # weight pass and the logistic Newton step's gram+vec), chunked
+    # moments-engine baseline vs the seg_gram lowering — the forms that
+    # used to take the pallas→chunked fallback rung.
+    from repro.core import moments
+
+    k = 4
+    X = U[:, : max(1, q - 1)]
+    Wk = jax.random.exponential(jax.random.split(key, 4)[3],
+                                (k, n)).astype(jnp.float32)
+    v = jax.random.normal(key, (n,), jnp.float32)
+    forms = {
+        "fold_weighted": lambda strat: jax.jit(
+            lambda X, Wk: moments.fold_weighted_gram(
+                X, Wk, intercept=True, row_block=row_block,
+                strategy=strat)[0]),
+        "gram_and_vec": lambda strat: jax.jit(
+            lambda X, w, v: moments.weighted_gram_and_vec(
+                X, w, v, intercept=True, row_block=row_block,
+                strategy=strat)[0]),
+    }
+    out = {"onehot": t_oh, "fused": t_fused}
+    for name, mk in forms.items():
+        args = (X, Wk) if name == "fold_weighted" else (X, w, v)
+        t_c = _time(lambda: jax.block_until_ready(mk("chunked")(*args)),
+                    reps)
+        t_p = _time(lambda: jax.block_until_ready(mk("pallas")(*args)),
+                    reps)
+        csv(f"kernel_seg_gram_{name}_chunked_{tag},{t_c*1e6:.0f},baseline")
+        csv(f"kernel_seg_gram_{name}_{sg_ops.default_backend()}_{tag},"
+            f"{t_p*1e6:.0f},speedup={t_c/max(t_p, 1e-12):.2f}x")
+        out[name] = t_p
+    return out
 
 
 def main(argv=None):

@@ -33,6 +33,7 @@ GATED_PREFIXES = (
     "kernel_seg_gram",
     "store",
     "serve",
+    "dist",
 )
 
 

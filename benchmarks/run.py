@@ -60,7 +60,11 @@ def main(argv=None):
     ap.add_argument("--json", default="BENCH_results.json",
                     help="output path for the standardized bench JSON "
                          "('' disables)")
+    ap.add_argument("--outdir", default="bench_out",
+                    help="directory for bench side artifacts (the "
+                         "Chrome trace) — keeps the repo root clean")
     args = ap.parse_args(argv)
+    pathlib.Path(args.outdir).mkdir(parents=True, exist_ok=True)
 
     rec = Recorder()
     t0 = time.time()
@@ -153,10 +157,20 @@ def main(argv=None):
 
     print("# --- observability: traced smoke run + cost audit ---")
     from benchmarks import bench_obs
+    trace_path = str(pathlib.Path(args.outdir) / "BENCH_trace.json")
     if args.smoke:
-        obs_payload = bench_obs.run(B=32, csv=rec)
+        obs_payload = bench_obs.run(B=32, csv=rec, out_trace=trace_path)
     else:
-        obs_payload = bench_obs.run(csv=rec)
+        obs_payload = bench_obs.run(csv=rec, out_trace=trace_path)
+
+    print("# --- distributed: row-sharded sweep + store over 8 devices ---")
+    # Runs in a SUBPROCESS: the forced host-platform device count must
+    # not leak into this process (jax pins the device count at first
+    # init, and every other section benches the 1-device baseline the
+    # >20% gate was recorded against).
+    from benchmarks import bench_distributed
+    bench_distributed.run_subprocess(
+        csv=rec, smoke=bool(args.smoke or not args.full))
 
     if not args.smoke:
         print("# --- kernel micro-benchmarks ---")

@@ -152,10 +152,15 @@ class CheckpointManager:
         steps = self._steps()
         return steps[-1][0] if steps else None
 
-    def restore(self, template, *, step: Optional[int] = None,
-                shardings=None) -> Tuple[Any, Dict[str, Any]]:
-        """Returns (state, meta).  ``shardings`` may target ANY mesh —
-        this is the elastic-restart path."""
+    def has_step(self, step: int) -> bool:
+        return any(s == step for s, _ in self._steps())
+
+    def load(self, *, step: Optional[int] = None
+             ) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+        """(path-keyed host arrays, meta) WITHOUT a template — for
+        callers whose leaf set varies per step (the sweep engine's
+        per-column checkpoints: a column with no CIs saves fewer
+        arrays).  ``restore`` remains the exact-template contract."""
         steps = dict(self._steps())
         if not steps:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
@@ -165,6 +170,13 @@ class CheckpointManager:
             arrays = {k: z[k] for k in z.files}
         with open(os.path.join(path, "meta.json")) as f:
             meta = json.load(f)
+        return arrays, meta
+
+    def restore(self, template, *, step: Optional[int] = None,
+                shardings=None) -> Tuple[Any, Dict[str, Any]]:
+        """Returns (state, meta).  ``shardings`` may target ANY mesh —
+        this is the elastic-restart path."""
+        arrays, meta = self.load(step=step)
         return restore_tree(template, arrays, shardings=shardings), meta
 
     # ------------------------------------------------------------------

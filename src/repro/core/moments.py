@@ -34,14 +34,17 @@ Memory model
                           kernel (repro.kernels.seg_gram): one HBM
                           pass per form — compiled mosaic on TPU, a
                           fused XLA scatter/matmul lowering elsewhere,
-                          interpret mode for certification.  Forms
-                          without a fused builder (the dense-weight
-                          ``fold_weighted_gram``, the two-weight
-                          ``weighted_gram_and_vec``) fall back to
-                          "chunked" — the pallas→chunked→whole ladder.
-                          Parity with "chunked" is tolerance-certified
-                          (≤1e-6 estimator-wide, conformance suite),
-                          not bitwise.
+                          interpret mode for certification.  Every
+                          dense-weight form now has a fused builder
+                          (``fold_weighted_gram`` via the kron
+                          builder, ``weighted_gram_and_vec`` via the
+                          augmented two-weight builder); a residual
+                          pallas→chunked fallback rung remains for
+                          not-yet-fused future forms and is counted per
+                          form on obs metrics.  Parity with "chunked"
+                          is tolerance-certified (≤1e-6
+                          estimator-wide, conformance suite), not
+                          bitwise.
 
 Bit-identity contract
 ---------------------
@@ -96,6 +99,17 @@ def _use_pallas(n: int, row_block: int, strategy: Optional[str]) -> bool:
     mirroring the chunked/whole semantics; row_block=0 keeps the legacy
     whole-array forms byte-for-byte."""
     return strategy == "pallas" and resolve_row_block(n, row_block) > 0
+
+
+def _active_data_mesh():
+    """The trace-time DataMesh, if ``repro.runtime.distributed`` has
+    been imported AND a ``use_data_mesh`` context is active.  The
+    sys.modules probe keeps core.moments free of any runtime-layer
+    import: a mesh can only be active if the module that activates it
+    is already loaded."""
+    import sys
+    rd = sys.modules.get("repro.runtime.distributed")
+    return None if rd is None else rd.current_data_mesh()
 
 
 def design(X: Array, *, intercept: bool = False,
@@ -168,6 +182,15 @@ def blocked_reduce(block_fn: Callable[..., Any], arrays: Sequence[Array],
         default_registry().counter(
             f"seg_gram.fallback[{form or 'unlabeled'}]").inc()
         strategy = "chunked"
+    dm = _active_data_mesh()
+    if dm is not None:
+        # row-sharded reduction over the active data mesh: the block
+        # axis splits across ("hosts", "devices") and the ordered mode
+        # replays this function's exact left-fold addition sequence —
+        # bitwise the chunked/whole result (runtime.distributed)
+        from repro.runtime.distributed import dist_reduce
+        return dist_reduce(block_fn, arrays, row_block=r, dm=dm,
+                           pad_values=pad_values, init=init)
     pad = (-n) % r
     if pad:
         pv = pad_values or (0,) * len(arrays)
@@ -277,6 +300,15 @@ def weighted_gram_and_vec(X: Array, wg: Array, v: Array, *,
     Neither form is certified batch-invariant under an executor's
     replicate vmap — replicate closures read gradients off augmented
     Grams in inference.numerics instead."""
+    if _use_pallas(X.shape[0], row_block, strategy):
+        D = design(X, intercept=intercept)
+        G, u = _seg_ops().gram_and_vec(D, wg, v, row_block=row_block)
+        # n_eff through the same blocked left fold as the chunked path
+        # (a whole-array sum reassociates) — bitwise, like fold_gram's
+        # counts: plain sums stay strategy-independent.
+        n_eff = blocked_reduce(lambda wb: wb.astype(jnp.float32).sum(),
+                               (wg,), row_block=row_block)
+        return G, u, n_eff
     if resolve_row_block(X.shape[0], row_block) == 0:
         D = design(X, intercept=intercept)
         ws = wg.astype(jnp.float32)
@@ -345,6 +377,9 @@ def fold_weighted_gram(X: Array, Wk: Array, *, intercept: bool = False,
     if r == 0:
         D = design(X, intercept=intercept, append=append)
         return jnp.einsum("ni,kn,nj->kij", D, Wk.astype(f32), D), n_eff
+    if strategy == "pallas":
+        D = design(X, intercept=intercept, append=append)
+        return _seg_ops().fold_weighted_design_gram(D, Wk, row_block=r), n_eff
 
     def block(Xb, Wb, *rest):
         D = design(Xb, intercept=intercept,

@@ -68,6 +68,69 @@ def _col(x: Array) -> Array:
     return x[:, None] if x.ndim == 1 else x
 
 
+def _active_data_mesh():
+    """Trace-time DataMesh probe (same sys.modules trick as
+    core.moments: no runtime-layer import unless a mesh can exist)."""
+    import sys
+
+    rd = sys.modules.get("repro.runtime.distributed")
+    return None if rd is None else rd.current_data_mesh()
+
+
+def _scatter_dist(builder, arrays, seg, w, n_segments, row_block, init, dm):
+    """Row-sharded blocked scatter lowering: per-block partials (the
+    same ``segment_sum`` / augmented-matmul graphs as ``_scatter``'s
+    scan body) evaluate shard-locally over the data mesh, then an
+    ordered left fold combines them in global block order
+    (runtime.distributed.dist_reduce).  Deterministic; parity with the
+    single-host lowerings is tolerance-grade like every pallas-strategy
+    path (per-block matmul partials reassociate the row reduction)."""
+    from repro.runtime.distributed import dist_reduce
+
+    r = int(row_block)
+    sids = None if seg is None else seg[:, 0]
+    bcast = {i: a for i, a in enumerate(arrays) if a.shape[0] == 1}
+    row_arrays = [a for i, a in enumerate(arrays) if i not in bcast]
+    qL, qR = jax.eval_shape(
+        builder,
+        *[
+            jax.ShapeDtypeStruct(
+                (a.shape[0] if a.shape[0] == 1 else r,) + a.shape[1:],
+                a.dtype,
+            )
+            for a in arrays
+        ],
+    )
+    qL, qR = qL.shape[1], qR.shape[1]
+
+    def block(*blks):
+        it = iter(blks)
+        full = [bcast[i] if i in bcast else next(it) for i in range(len(arrays))]
+        sb = next(it) if sids is not None else None
+        wb = next(it) if w is not None else None
+        L, R = builder(*full)
+        Lw = L if wb is None else L * wb
+        if sb is None:
+            return Lw.T @ R
+        outer = (Lw[:, :, None] * R[:, None, :]).reshape(L.shape[0], -1)
+        return jax.ops.segment_sum(outer, sb, num_segments=n_segments)
+
+    dist_arrays = list(row_arrays)
+    pad_values = [0] * len(row_arrays)
+    if sids is not None:
+        dist_arrays.append(sids)
+        pad_values.append(-1)
+    if w is not None:
+        dist_arrays.append(w)
+        pad_values.append(0)
+    acc0 = init
+    if init is not None and sids is not None:
+        acc0 = init.reshape(n_segments, qL * qR)
+    G = dist_reduce(block, dist_arrays, row_block=r, dm=dm,
+                    pad_values=pad_values, init=acc0)
+    return G if sids is None else G.reshape(n_segments, qL, qR)
+
+
 def _scatter(builder, arrays, seg, w, n_segments, row_block,
              init=None) -> Array:
     n = max(a.shape[0] for a in arrays)
@@ -161,6 +224,15 @@ def seg_reduce(
     if seg is not None:
         seg = seg.astype(jnp.int32)
         seg = seg[:, None] if seg.ndim == 1 else seg
+    n = max(a.shape[0] for a in arrays)
+    if be != "ref" and 0 < row_block < n:
+        dm = _active_data_mesh()
+        if dm is not None:
+            # an active data mesh overrides the single-host lowerings
+            # on the blocked path ("ref" stays the unsharded oracle)
+            return _scatter_dist(
+                builder, arrays, seg, w, n_segments, row_block, init, dm
+            )
     if be == "ref":
         G = _ref.seg_gram_ref(
             builder, arrays, seg=seg, w=w, n_segments=n_segments
@@ -233,6 +305,39 @@ def fold_design_gram(
         backend=backend,
     )
     return G, segment_counts(folds, k)
+
+
+def fold_weighted_design_gram(
+    D: Array, Wk: Array, *, row_block: int = 0, backend: str = ""
+) -> Array:
+    """(k, q, q) dense-weight fold Gram ``G[k] = Σ_n Wk[k, n] d_n d_nᵀ``
+    — the ``ni,kn,nj->kij`` form fused as one kernel pass (the kron
+    builder widens L to k·q columns; n_eff stays outside, computed as a
+    plain strategy-independent sum by moments.fold_weighted_gram)."""
+    k, q = Wk.shape[0], D.shape[1]
+    G = seg_reduce(
+        _ref.build_fold_weighted,
+        [Wk.T, D],
+        row_block=row_block,
+        backend=backend,
+    )
+    return G.reshape(k, q, q)
+
+
+def gram_and_vec(
+    D: Array, wg: Array, v: Array, *, row_block: int = 0, backend: str = ""
+) -> Tuple[Array, Array]:
+    """((q, q) Gram with weights wg, (q,) cross-moment with weights v)
+    in one fused pass — the logistic Newton step's two-weight form,
+    read off the augmented L = [wg·d | v]."""
+    q = D.shape[1]
+    Gaug = seg_reduce(
+        _ref.build_gram_and_vec,
+        [D, _col(wg), _col(v)],
+        row_block=row_block,
+        backend=backend,
+    )
+    return Gaug[:q], Gaug[q]
 
 
 def residual_gram(

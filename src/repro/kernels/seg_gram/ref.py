@@ -60,6 +60,24 @@ def build_iv(ry: Array, rt: Array, rz: Array, phi: Array) -> Pair:
     return M, M
 
 
+def build_fold_weighted(Wt: Array, D: Array) -> Pair:
+    """Dense per-fold weight matrix (moments.fold_weighted_gram):
+    L_n = Wt_n ⊗ d_n (the k per-fold weights kron the design row), so
+    G = L^T R reshapes to the (k, q, q) stack Σ_n Wk[k, n] d_n d_nᵀ.
+    Zero rows give zero L/R rows (both factors vanish)."""
+    r = Wt.shape[0]
+    L = (Wt[:, :, None] * D[:, None, :]).reshape(r, Wt.shape[1] * D.shape[1])
+    return L, D
+
+
+def build_gram_and_vec(D: Array, wg: Array, v: Array) -> Pair:
+    """Two-weight Gram + cross-moment (moments.weighted_gram_and_vec):
+    L = [wg·d | v], R = d — the top q rows of L^T R are Σ wg d dᵀ and
+    the trailing row is Σ v dᵀ (the augmented form; the thin ni,n->i
+    mat-vec is not chunk-stable — see core.moments)."""
+    return jnp.concatenate([wg * D, v], axis=1), D
+
+
 def build_residual_meat(
     y: Array,
     t: Array,

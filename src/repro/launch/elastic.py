@@ -49,3 +49,33 @@ def elastic_restore(manager: CheckpointManager, model: Model, rules, mesh,
     template = state_template(model)
     shardings = state_shardings(model, rules, mesh)
     return manager.restore(template, step=step, shardings=shardings)
+
+
+# ----------------------------------------------------------------------
+# Causal path: elastic sweeps
+# ----------------------------------------------------------------------
+def sweep_checkpoint_manager(directory: str, spec,
+                             *, keep_best: int = 1) -> CheckpointManager:
+    """CheckpointManager sized for a per-column sweep checkpoint
+    (step = column index): retention must cover every column plus one
+    in-flight save, or early columns get pruned before the sweep ends.
+    ``sweep()`` applies the same floor defensively; creating the
+    manager here makes the elastic entry point one call."""
+    return CheckpointManager(directory,
+                             keep_latest=len(spec.columns) + 1,
+                             keep_best=keep_best)
+
+
+def elastic_sweep(spec, *, directory: str, data_mesh=None, **sweep_kwargs):
+    """Run (or resume) a sweep with per-column checkpointing — the
+    causal-path analogue of ``elastic_restore``.  A lost shard or a
+    killed process costs at most the in-flight column: re-invoking with
+    the same ``directory`` restores every completed column from disk
+    and recomputes only the missing ones (sweep.engine's resume path,
+    signature-checked per column).  ``data_mesh`` passes through to
+    row-shard each column's moment passes."""
+    from repro.sweep import sweep
+
+    manager = sweep_checkpoint_manager(directory, spec)
+    return sweep(spec, data_mesh=data_mesh, checkpoint=manager,
+                 resume=True, **sweep_kwargs)

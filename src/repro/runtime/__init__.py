@@ -19,6 +19,22 @@ and sweep cells all dispatch through it.
 #                 retry with backend downgrade (shard_map -> vmap ->
 #                 serial, bit-identical results), nested (outer x inner)
 #                 parallelism via map_product
+#   distributed.py row-sharded moment reduction over a ("hosts",
+#                 "devices") data mesh — ordered mode bitwise vs the
+#                 single-host chunked path; TaskRuntime(data_mesh=...)
+#                 adds the shard_map -> single-host ladder rung
+#   jobs.py       minimal job-submission + event-stream API over
+#                 sweeps: submit a SweepSpec, poll status, subscribe
+#                 to per-column completion events (EventLog-backed)
+from repro.runtime.distributed import (
+    DataMesh,
+    ShardLostError,
+    current_data_mesh,
+    dist_reduce,
+    inject_shard_failure,
+    make_data_mesh,
+    use_data_mesh,
+)
 from repro.runtime.future import TaskFuture, TaskGraph, resolve
 from repro.runtime.memory import (
     ChunkCost,
@@ -35,7 +51,18 @@ from repro.runtime.scheduler import (
     as_runtime,
 )
 
+from repro.runtime.jobs import JobManager, SweepJob
+
 __all__ = [
+    "DataMesh",
+    "ShardLostError",
+    "current_data_mesh",
+    "dist_reduce",
+    "inject_shard_failure",
+    "make_data_mesh",
+    "use_data_mesh",
+    "JobManager",
+    "SweepJob",
     "TaskFuture",
     "TaskGraph",
     "resolve",

@@ -160,6 +160,14 @@ class TaskRuntime:
                    memory model (CausalConfig.runtime_chunk).
     max_retries    extra attempts a chunk gets after its first failure
                    (each attempt moves one rung down the ladder).
+    data_mesh      optional runtime.distributed.DataMesh: task closures
+                   trace with the mesh active, so every blocked moment
+                   reduction inside them row-shards across
+                   ("hosts", "devices") — bitwise the single-host
+                   result in "ordered" mode.  The ladder gains a
+                   shard_map → single-host rung on top: a lost shard
+                   (ShardLostError or any mesh failure) retries the
+                   SAME chunk without the mesh, same bits.
     tracer         optional repro.obs.Tracer: spans around map / chunk /
                    DAG-node execution (block_until_ready-honest), chunk
                    latency histograms, downgrade/retry/jit-miss
@@ -186,18 +194,24 @@ class TaskRuntime:
         max_retries: int = 2,
         mesh=None,
         rules=None,
+        data_mesh=None,
         tracer: Optional[Tracer] = None,
         events_maxlen: int = 512,
     ):
         self._primary = make_executor(executor, mesh=mesh, rules=rules)
         self._mesh = mesh
         self._rules = rules
+        self.data_mesh = data_mesh
         self.memory_budget = int(memory_budget)
         self.chunk = int(chunk)
         self.max_retries = int(max_retries)
         self.tracer = tracer
         self.events = EventLog(maxlen=events_maxlen)
         self._graph = TaskGraph()
+        # fn -> mesh-activating wrapper, per runtime: the executor jit
+        # cache keys on the closure OBJECT, so mesh and plain traces of
+        # the same fn must go through distinct stable closures
+        self._mesh_fns: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
     def _emit(self, event: RuntimeEvent) -> None:
         """Record one scheduling decision: always into the bounded
@@ -235,6 +249,25 @@ class TaskRuntime:
                 out.append(exe)
         return tuple(out)
 
+    def _mesh_variant(self, fn):
+        """A stable per-(runtime, fn) closure whose trace runs with the
+        data mesh active — so blocked moments inside ``fn`` row-shard
+        (runtime.distributed), and the mesh trace caches separately
+        from the plain one."""
+        wrapped = self._mesh_fns.get(fn)
+        if wrapped is None:
+            fn_ref = weakref.ref(fn)
+            dm = self.data_mesh
+
+            def wrapped(*a, **kw):
+                from repro.runtime.distributed import use_data_mesh
+
+                with use_data_mesh(dm):
+                    return fn_ref()(*a, **kw)
+
+            self._mesh_fns[fn] = wrapped
+        return wrapped
+
     def _jit_miss_scope(self, label: str):
         """While tracing, count executor jit-cache misses (fresh compiled
         wrappers) per closure under ``jit_cache_miss[...]`` counters."""
@@ -258,29 +291,41 @@ class TaskRuntime:
         model: Optional[MemoryModel] = None,
     ) -> Any:
         err: Optional[BaseException] = None
-        ladder = self._ladder()
-        for attempt, exe in enumerate(ladder):
+        # the attempt plan: an optional data-mesh rung on the primary
+        # backend first (lost shards fall back to the SAME chunk
+        # single-host, same bits), then the plain backend ladder
+        plans: List[Tuple[Executor, Any, str]] = []
+        if self.data_mesh is not None:
+            plans.append(
+                (
+                    self._primary,
+                    self._mesh_variant(fn),
+                    f"data_mesh[{self.data_mesh.label}]:{self._primary.name}",
+                )
+            )
+        plans.extend((exe, fn, exe.name) for exe in self._ladder())
+        for attempt, (exe, run_fn, rung) in enumerate(plans):
             if attempt > self.max_retries:
                 break
             if attempt:
                 self._emit(
-                    RuntimeEvent("downgrade", label, index, exe.name, str(err))
+                    RuntimeEvent("downgrade", label, index, rung, str(err))
                 )
             try:
                 tr = self.tracer
                 if tr is None:
-                    return exe.map(fn, xs_c, *args)
+                    return exe.map(run_fn, xs_c, *args)
                 return self._run_chunk_traced(
-                    tr, exe, fn, xs_c, args, label, index, model
+                    tr, exe, run_fn, xs_c, args, label, index, model
                 )
             except Exception as e:  # noqa: BLE001 — the ladder handles it
                 err = e
-                # a re-attempt is coming iff the ladder has a lower rung
+                # a re-attempt is coming iff the plan has a lower rung
                 # left AND the retry budget allows it — that re-attempt
                 # is a distinct "retry" event carrying the trigger
-                if attempt < self.max_retries and attempt + 1 < len(ladder):
+                if attempt < self.max_retries and attempt + 1 < len(plans):
                     self._emit(
-                        RuntimeEvent("retry", label, index, exe.name, str(e))
+                        RuntimeEvent("retry", label, index, rung, str(e))
                     )
         assert err is not None
         raise err
@@ -466,6 +511,7 @@ def as_runtime(
     *,
     mesh=None,
     rules=None,
+    data_mesh=None,
     memory_budget: int = 0,
     chunk: int = 0,
     max_retries: int = 2,
@@ -473,14 +519,16 @@ def as_runtime(
 ) -> TaskRuntime:
     """Coerce an executor name / Executor / TaskRuntime into a
     TaskRuntime — the adapter every migrated caller goes through.  A
-    TaskRuntime passes through untouched (it keeps its own tracer);
-    ``tracer`` attaches to freshly-built runtimes only."""
+    TaskRuntime passes through untouched (it keeps its own tracer and
+    data mesh); ``tracer`` / ``data_mesh`` attach to freshly-built
+    runtimes only."""
     if isinstance(executor, TaskRuntime):
         return executor
     return TaskRuntime(
         executor,
         mesh=mesh,
         rules=rules,
+        data_mesh=data_mesh,
         memory_budget=memory_budget,
         chunk=chunk,
         max_retries=max_retries,

@@ -115,14 +115,20 @@ class MomentStore:
     the checkpoint template) exists before the first row arrives.
     ``key`` roots the fold-assignment lineage (column i uses
     ``fold_in(key, i)``, mirroring the sweep's ``column_keys``).
+    ``data_mesh`` (runtime.distributed.DataMesh) row-shards each
+    ingest pass across ("hosts", "devices"): the sharded blocked
+    reduction seeds the SAME ordered left fold, so aligned-ingest
+    bitwise invariance carries over unchanged in "ordered" mode.
     """
 
     def __init__(self, spec: SweepSpec, n_features: int,
-                 key: Optional[Array] = None, *, tracer=None):
+                 key: Optional[Array] = None, *, tracer=None,
+                 data_mesh=None):
         self.spec = spec
         self.n_features = int(n_features)
         self.key = key if key is not None else jax.random.PRNGKey(0)
         self.tracer = tracer
+        self.data_mesh = data_mesh
         self.n_total = 0
         self.n_ingests = 0
         self.version = 0
@@ -239,11 +245,24 @@ class MomentStore:
         if fn is not None:
             return fn
         n_cells = self.spec.n_segments * layout.k
+        dm = self.data_mesh
 
         def _run(state, X, t, y, sids, start, col_key, z=None):
             folds = _row_folds(col_key, start, X.shape[0], layout.k)
             comb = sids.astype(jnp.int32) * layout.k + folds
             phi = cate_basis(X, cfg.cate_features)
+            if dm is not None:
+                # Activate at trace time: blocked_reduce inside
+                # ingest_cells routes each moment pass through
+                # dist_reduce on the row mesh.  The per-instance
+                # _jit_cache keeps mesh/plain traces separate.
+                from repro.runtime.distributed import use_data_mesh
+
+                with use_data_mesh(dm):
+                    return store_stats.ingest_cells(
+                        layout, state, X, t, y, z, phi, comb, n_cells,
+                        row_block=cfg.row_block,
+                        strategy=cfg.row_block_strategy)
             return store_stats.ingest_cells(
                 layout, state, X, t, y, z, phi, comb, n_cells,
                 row_block=cfg.row_block, strategy=cfg.row_block_strategy)

@@ -75,7 +75,7 @@ def _segment_mask(sids: jax.Array, sid) -> jax.Array:
     return (sids == sid).astype(jnp.float32)
 
 
-def _runtime(cfg: CausalConfig, executor, tracer=None):
+def _runtime(cfg: CausalConfig, executor, tracer=None, data_mesh=None):
     from repro.runtime import as_runtime
 
     return as_runtime(
@@ -83,6 +83,7 @@ def _runtime(cfg: CausalConfig, executor, tracer=None):
         memory_budget=cfg.runtime_memory_budget,
         chunk=cfg.sweep_chunk or cfg.runtime_chunk,
         max_retries=cfg.runtime_max_retries,
+        data_mesh=data_mesh,
         tracer=tracer,
     )
 
@@ -170,6 +171,73 @@ def _want_ci(cfg: CausalConfig, with_ci: Optional[bool]) -> bool:
     return cfg.inference not in ("none", "") and cfg.n_bootstrap > 0
 
 
+# -- elastic per-column checkpoints (repro.checkpoint) ----------------------
+
+_CKPT_SCHEMA = "sweep-column-v1"
+_CKPT_ARRAYS = ("thetas", "ates", "ses", "ci_lo", "ci_hi", "replicates")
+
+
+def _column_signature(name: str, cfg: CausalConfig, n_segments: int) -> str:
+    """Provenance key a resumed column must match: same estimator, same
+    frozen config (repr is stable for the dataclass), same grid height."""
+    import hashlib
+
+    return hashlib.sha1(
+        f"{name}|{cfg!r}|{n_segments}".encode()
+    ).hexdigest()[:16]
+
+
+def _save_column(mgr, idx: int, col: ColumnResult, n_segments: int) -> None:
+    """One checkpoint step per column (step = column index): the present
+    result arrays + provenance meta.  Failed columns save too (the
+    attempt is on record) but never restore — a resume recomputes them,
+    which is the whole point: a lost shard costs ONE column."""
+    state = {
+        k: getattr(col, k)
+        for k in _CKPT_ARRAYS
+        if getattr(col, k) is not None
+    }
+    extra = {
+        "schema": _CKPT_SCHEMA,
+        "signature": _column_signature(col.estimator, col.cfg, n_segments),
+        "estimator": col.estimator,
+        "key_index": int(col.key_index),
+        "shared_nuisance": bool(col.shared_nuisance),
+        "events": list(col.events),
+        "error": col.error,
+        "aligned": col.aligned,
+    }
+    mgr.save(idx, state, extra=extra)
+
+
+def _restore_column(
+    mgr, idx: int, name: str, cfg: CausalConfig, n_segments: int
+) -> Optional[ColumnResult]:
+    """The saved ColumnResult for step ``idx``, or None when it is
+    missing, provenance-mismatched (spec changed under the checkpoint
+    dir), or errored (failed columns recompute on resume)."""
+    if not mgr.has_step(idx):
+        return None
+    arrays, meta = mgr.load(step=idx)
+    extra = meta.get("extra") or {}
+    if extra.get("schema") != _CKPT_SCHEMA:
+        return None
+    if extra.get("signature") != _column_signature(name, cfg, n_segments):
+        return None
+    if extra.get("error"):
+        return None
+    kw = {k: jnp.asarray(arrays[k]) for k in _CKPT_ARRAYS if k in arrays}
+    return ColumnResult(
+        estimator=name,
+        cfg=cfg,
+        key_index=int(extra.get("key_index", idx)),
+        shared_nuisance=bool(extra.get("shared_nuisance", False)),
+        events=tuple(extra.get("events") or ()) + ("restored",),
+        aligned=extra.get("aligned"),
+        **kw,
+    )
+
+
 def _run_column(
     rspec: EstimatorSpec,
     cfg: CausalConfig,
@@ -180,6 +248,7 @@ def _run_column(
     executor,
     with_ci: Optional[bool],
     tracer=None,
+    data_mesh=None,
 ) -> ColumnResult:
     """One column as E masked single-fit cells through the runtime."""
     cell = rspec.weighted_fit(cfg)
@@ -188,7 +257,7 @@ def _run_column(
         "key": column_keys(key, col_index, n_segments),
         "sid": jnp.arange(n_segments, dtype=jnp.int32),
     }
-    rt = _runtime(cfg, executor, tracer)
+    rt = _runtime(cfg, executor, tracer, data_mesh)
     with maybe_span(
         rt.tracer, f"sweep.column[{col_index}]", cat="sweep",
         estimator=rspec.name, segments=n_segments,
@@ -223,6 +292,7 @@ def _run_shared_group(
     executor,
     with_ci: Optional[bool],
     tracer=None,
+    data_mesh=None,
 ) -> List[Tuple[int, ColumnResult]]:
     """Columns differing only in final stage: ONE residual pass per
     segment (keyed on the first member's lineage), then a cheap
@@ -231,7 +301,7 @@ def _run_shared_group(
     resid_fn = rspec.residual_fit(cfg0)
     keys = column_keys(key, first_idx, n_segments)
     sid = jnp.arange(n_segments, dtype=jnp.int32)
-    rt = _runtime(cfg0, executor, tracer)
+    rt = _runtime(cfg0, executor, tracer, data_mesh)
     # the shared residual pass is group-fatal by design (every member
     # consumes it); everything after is isolated per member
     with maybe_span(
@@ -322,15 +392,18 @@ def _segmented_or_cells(
     executor,
     with_ci: Optional[bool],
     tracer=None,
+    data_mesh=None,
 ) -> ColumnResult:
     """mode="segmented" dispatch: the one-pass kernels where they apply,
-    the plain cell path otherwise."""
+    the plain cell path otherwise.  The segmented fast path stays
+    single-host (its module-level jits would cache a mesh trace across
+    unrelated sweeps); data_mesh applies to the cells fallback only."""
     from repro.sweep.segmented import segmented_column, segmented_supported
 
     if not segmented_supported(rspec, cfg):
         return _run_column(
             rspec, cfg, col_index, base_data, n_segments, key, executor,
-            with_ci, tracer,
+            with_ci, tracer, data_mesh,
         )
     with maybe_span(
         tracer, f"sweep.column[{col_index}]", cat="sweep",
@@ -366,6 +439,10 @@ def sweep(
     reuse: bool = True,
     with_ci: Optional[bool] = None,
     tracer=None,
+    data_mesh=None,
+    checkpoint=None,
+    resume: bool = True,
+    column_callback=None,
 ) -> EffectPanel:
     """Run the (segments × estimator-configs) grid as batched programs.
 
@@ -389,6 +466,24 @@ def sweep(
                       the runtimes under it inherit the tracer — chunk
                       spans, metrics, and the cost audit nest inside.
                       None (the default) changes nothing.
+    data_mesh         optional runtime.distributed.DataMesh: column
+                      cells row-shard across ("hosts", "devices"), with
+                      the shard_map → single-host ladder rung catching
+                      lost shards — bitwise the single-host panel in
+                      "ordered" mode (cells path; the segmented fast
+                      path stays single-host).
+    checkpoint        optional repro.checkpoint.CheckpointManager: each
+                      column saves as checkpoint step = column index the
+                      moment it settles (success OR error), so a killed
+                      job — or a shard loss that exhausted the ladder —
+                      costs at most the in-flight column on the next
+                      run.  ``keep_latest`` is raised to cover the grid.
+    resume            with ``checkpoint``: restore provenance-matching
+                      completed columns (tagged "restored" in their
+                      events) and recompute only missing/failed ones.
+    column_callback   ``f(index, ColumnResult)`` called as each column
+                      settles (including restored ones) — the event
+                      stream hook of runtime.jobs.
     """
     if mode not in ("cells", "segmented"):
         raise ValueError(f"unknown sweep mode {mode!r} (cells | segmented)")
@@ -402,10 +497,34 @@ def sweep(
 
     results: Dict[int, ColumnResult] = {}
 
+    if checkpoint is not None:
+        # retention must cover one step per column or early columns
+        # would be pruned before the sweep finishes
+        checkpoint.keep_latest = max(
+            checkpoint.keep_latest, len(spec.columns) + 1
+        )
+
+    def record(idx: int, col: ColumnResult, *, save: bool = True) -> None:
+        results[idx] = col
+        if save and checkpoint is not None:
+            _save_column(checkpoint, idx, col, n_seg)
+        if column_callback is not None:
+            column_callback(idx, col)
+
+    restored: set = set()
+    if checkpoint is not None and resume:
+        for idx, (name, cfg) in enumerate(spec.columns):
+            col = _restore_column(checkpoint, idx, name, cfg, n_seg)
+            if col is not None:
+                restored.add(idx)
+                record(idx, col, save=False)
+
     # -- group columns: (estimator, nuisance signature) -----------------
     groups: Dict[Any, List[Tuple[int, CausalConfig]]] = {}
     order: List[Any] = []
     for idx, (name, cfg) in enumerate(spec.columns):
+        if idx in restored:
+            continue
         gk = (name, nuisance_signature(cfg))
         if gk not in groups:
             groups[gk] = []
@@ -423,22 +542,22 @@ def sweep(
                 raise ValueError(f"estimator {name!r} needs an instrument z")
         except Exception as err:  # noqa: BLE001 — isolated per column
             for idx, cfg in members:
-                results[idx] = ColumnResult(
+                record(idx, ColumnResult(
                     estimator=name, cfg=cfg, key_index=idx, error=str(err)
-                )
+                ))
             continue
 
         if mode == "segmented":
             for idx, cfg in members:
                 try:
-                    results[idx] = _segmented_or_cells(
+                    record(idx, _segmented_or_cells(
                         rspec, cfg, idx, base_data, n_seg, key, executor,
-                        with_ci, tracer,
-                    )
+                        with_ci, tracer, data_mesh,
+                    ))
                 except Exception as err:  # noqa: BLE001
-                    results[idx] = ColumnResult(
+                    record(idx, ColumnResult(
                         estimator=name, cfg=cfg, key_index=idx, error=str(err)
-                    )
+                    ))
             continue
 
         shareable = (
@@ -451,22 +570,22 @@ def sweep(
             if shareable:
                 for idx, col in _run_shared_group(
                     rspec, members, base_data, n_seg, key, executor,
-                    with_ci, tracer,
+                    with_ci, tracer, data_mesh,
                 ):
-                    results[idx] = col
+                    record(idx, col)
             else:
                 for idx, cfg in members:
-                    results[idx] = _run_column(
+                    record(idx, _run_column(
                         rspec, cfg, idx, base_data, n_seg, key, executor,
-                        with_ci, tracer,
-                    )
+                        with_ci, tracer, data_mesh,
+                    ))
         except Exception as err:  # noqa: BLE001 — one column/group must
             # not poison the panel; the runtime ladder already retried
             for idx, cfg in members:
                 if idx not in results:
-                    results[idx] = ColumnResult(
+                    record(idx, ColumnResult(
                         estimator=name, cfg=cfg, key_index=idx, error=str(err)
-                    )
+                    ))
 
     columns = tuple(results[i] for i in range(len(spec.columns)))
     return EffectPanel(

@@ -152,19 +152,64 @@ def test_pallas_requires_blocked_path(arrs):
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
-def test_fallback_ladder_forms(arrs, backend):
-    """Forms WITHOUT fused builders (dense (k, n) weights / two-weight
-    passes) silently take the chunked lowering under strategy="pallas"
-    — exact equality, the fallback ladder's contract."""
+def test_fused_forms_take_no_fallback(arrs, backend):
+    """``fold_weighted_gram`` and ``weighted_gram_and_vec`` lower
+    through fused seg_gram builders: tolerance parity with the chunked
+    reference, n_eff bitwise, and — the load-bearing assertion — the
+    ``seg_gram.fallback[<form>]`` counters stay at ZERO.  Before the
+    fused builders landed, both forms silently laddered pallas→chunked
+    on every trace; this pins the fusion so it cannot regress."""
+    from repro.obs.metrics import default_registry
+
     a = arrs
     Wk = jax.random.exponential(jax.random.PRNGKey(9), (_K, _N))
-    ref = moments.fold_weighted_gram(a["X"], Wk, intercept=True,
-                                     row_block=_RB, strategy="chunked")
+    ref_fw = moments.fold_weighted_gram(a["X"], Wk, intercept=True,
+                                        row_block=_RB, strategy="chunked")
+    ref_gv = moments.weighted_gram_and_vec(a["X"], a["w"], a["y"],
+                                           intercept=True, row_block=_RB,
+                                           strategy="chunked")
     with sg_ops.force_backend(backend):
-        got = moments.fold_weighted_gram(a["X"], Wk, intercept=True,
-                                         row_block=_RB,
-                                         strategy="pallas")
-    np.testing.assert_array_equal(np.asarray(ref[0]), np.asarray(got[0]))
+        got_fw = moments.fold_weighted_gram(a["X"], Wk, intercept=True,
+                                            row_block=_RB,
+                                            strategy="pallas")
+        got_gv = moments.weighted_gram_and_vec(a["X"], a["w"], a["y"],
+                                               intercept=True,
+                                               row_block=_RB,
+                                               strategy="pallas")
+    _close(got_fw[0], ref_fw[0], f"fold_weighted_gram {backend}")
+    np.testing.assert_array_equal(np.asarray(ref_fw[1]),
+                                  np.asarray(got_fw[1]))  # n_eff bitwise
+    _close(got_gv[0], ref_gv[0], f"gram_and_vec.G {backend}")
+    _close(got_gv[1], ref_gv[1], f"gram_and_vec.u {backend}")
+    np.testing.assert_array_equal(np.asarray(ref_gv[2]),
+                                  np.asarray(got_gv[2]))
+    counters = default_registry().snapshot()["counters"]
+    fallbacks = {k: v for k, v in counters.items()
+                 if k.startswith("seg_gram.fallback[") and v}
+    assert not fallbacks, f"fused forms took the fallback rung: {fallbacks}"
+
+
+def test_fallback_ladder_counts_unfused_form(arrs):
+    """Every registry moment form is fused now, but the counted
+    pallas→chunked rung in ``blocked_reduce`` stays for future unfused
+    forms: a direct call under strategy="pallas" yields the chunked
+    bits exactly AND bumps ``seg_gram.fallback[<form>]`` — the
+    ladder's observability contract."""
+    from repro.core.moments import blocked_reduce
+    from repro.obs.metrics import default_registry
+
+    a = arrs
+
+    def block(Xb, wb):
+        return (wb[:, None].astype(jnp.float32) * Xb).T @ Xb
+
+    ref = blocked_reduce(block, (a["X"], a["w"]), row_block=_RB,
+                         strategy="chunked")
+    got = blocked_reduce(block, (a["X"], a["w"]), row_block=_RB,
+                         strategy="pallas", form="custom_form")
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+    counters = default_registry().snapshot()["counters"]
+    assert counters.get("seg_gram.fallback[custom_form]", 0) >= 1
 
 
 # ---------------------------------------------------------------------------

@@ -422,12 +422,20 @@ def test_obs_spans_and_metrics(data, sids):
 
 
 def test_fallback_rung_counter():
+    # fold_weighted_gram gained a fused builder (PR 10) so it no longer
+    # exercises the pallas->chunked rung; a direct blocked_reduce with a
+    # form seg_gram has no builder for still must count per-form.
     from repro.core import moments
     from repro.obs.metrics import default_registry
 
-    c = default_registry().counter("seg_gram.fallback[fold_weighted_gram]")
+    c = default_registry().counter("seg_gram.fallback[store_custom_form]")
     before = c.value
     X = jnp.ones((64, 3), jnp.float32)
-    Wk = jnp.ones((2, 64), jnp.float32)
-    moments.fold_weighted_gram(X, Wk, row_block=16, strategy="pallas")
+    moments.blocked_reduce(
+        lambda xb: xb.T @ xb,
+        (X,),
+        row_block=16,
+        strategy="pallas",
+        form="store_custom_form",
+    )
     assert c.value == before + 1
